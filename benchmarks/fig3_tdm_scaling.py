@@ -1,0 +1,120 @@
+"""Paper Fig. 3 reproduction: average execution time vs number of nodes for
+the two TDM primitives over a clique (the worst-case relation).
+
+- ``get1meas``: round-robin tournament schedule (n-1 pairwise slots)
+- ``getMeas``:  the paper's universal algorithm (1 slot, n-1 links/node)
+
+Paper's claims to validate (§IV): (1) both grow O(n²) with clique size —
+consistent with the O(n²) edge count; (2) get1meas is slower by a constant
+factor (the lower line in Fig. 3 is getMeas).
+
+The paper measures wall time of its TCP process testbed on an i7-8550U; we
+measure wall time of the faithful discrete-event simulator (same message
+count, same algorithmic structure, no network noise), plus the analytic
+message/slot counts that explain the shape.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.ptbfla_sim import run_schedule_get1meas, run_schedule_getmeas
+from repro.core.schedule import clique_multilink, round_robin_tournament
+
+
+def time_once(fn, *args, **kwargs) -> float:
+    t0 = time.perf_counter()
+    fn(*args, **kwargs)
+    return time.perf_counter() - t0
+
+
+def run(node_counts: List[int], reps: int, seed: int = 0) -> List[Dict]:
+    rows = []
+    for n in node_counts:
+        data = {i: float(i) for i in range(n)}
+        rr_sched = round_robin_tournament(n)
+        ml_sched = clique_multilink(n)
+        t_rr = [
+            time_once(run_schedule_get1meas, rr_sched, data, n, seed + r)
+            for r in range(reps)
+        ]
+        t_ml = [
+            time_once(run_schedule_getmeas, ml_sched, data, n, seed + r)
+            for r in range(reps)
+        ]
+        _, sim_rr = run_schedule_get1meas(rr_sched, data, n, seed)
+        _, sim_ml = run_schedule_getmeas(ml_sched, data, n, seed)
+        rows.append(
+            dict(
+                n=n,
+                get1meas_ms=float(np.mean(t_rr) * 1e3),
+                getmeas_ms=float(np.mean(t_ml) * 1e3),
+                get1meas_slots=len(rr_sched),
+                getmeas_slots=len(ml_sched),
+                messages=sim_ml.total_messages,
+                messages_rr=sim_rr.total_messages,
+            )
+        )
+    return rows
+
+
+def quadratic_fit_r2(ns: np.ndarray, ts: np.ndarray) -> float:
+    """R² of a quadratic fit t = a n² + b n + c (paper: O(n²) growth)."""
+    coeffs = np.polyfit(ns, ts, 2)
+    pred = np.polyval(coeffs, ns)
+    ss_res = float(np.sum((ts - pred) ** 2))
+    ss_tot = float(np.sum((ts - ts.mean()) ** 2))
+    return 1.0 - ss_res / max(ss_tot, 1e-30)
+
+
+def main(argv=None) -> Dict:
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true", help="paper-size sweep 20..200")
+    p.add_argument("--reps", type=int, default=None)
+    p.add_argument("--json", type=str, default=None)
+    args = p.parse_args(argv)
+
+    if args.full:
+        counts = list(range(20, 201, 20))
+        reps = args.reps or 5
+    else:
+        counts = [20, 40, 60, 80, 100]
+        reps = args.reps or 3
+
+    rows = run(counts, reps)
+    ns = np.array([r["n"] for r in rows], dtype=float)
+    t1 = np.array([r["get1meas_ms"] for r in rows])
+    tm = np.array([r["getmeas_ms"] for r in rows])
+
+    r2_1 = quadratic_fit_r2(ns, t1)
+    r2_m = quadratic_fit_r2(ns, tm)
+    gap = float(np.mean(t1 / tm))
+
+    print(f"{'n':>5} {'get1meas_ms':>12} {'getMeas_ms':>11} {'ratio':>6} {'msgs':>8}")
+    for r in rows:
+        print(
+            f"{r['n']:>5} {r['get1meas_ms']:>12.2f} {r['getmeas_ms']:>11.2f} "
+            f"{r['get1meas_ms'] / r['getmeas_ms']:>6.2f} {r['messages']:>8}"
+        )
+    print(f"\nquadratic fit R^2: get1meas={r2_1:.4f}  getMeas={r2_m:.4f}")
+    print(f"mean constant-factor gap (get1meas / getMeas): {gap:.2f}x")
+    verdict_growth = r2_1 > 0.98 and r2_m > 0.98
+    verdict_gap = gap > 1.0
+    print(f"paper claim 'O(n^2) growth'        : {'CONFIRMED' if verdict_growth else 'REFUTED'}")
+    print(f"paper claim 'getMeas faster, const': {'CONFIRMED' if verdict_gap else 'REFUTED'}")
+
+    out = dict(rows=rows, r2_get1meas=r2_1, r2_getmeas=r2_m, gap=gap,
+               growth_confirmed=bool(verdict_growth), gap_confirmed=bool(verdict_gap))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""MoE dispatch efficiency: useful-FLOPs ratio and dispatch traffic vs
+capacity factor, from the staged-program cost model (no device execution).
+
+Shows why the decode path needed capacity-floor surgery (EXPERIMENTS.md
+§Perf): E*C slot padding multiplies wasted expert FLOPs when tokens/group
+is small.
+
+Run:  PYTHONPATH=src python -m benchmarks.moe_dispatch
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import archs
+from repro.launch.flops import program_costs
+from repro.models import moe as moe_lib
+from repro.models.config import MoEConfig
+
+
+def measure(cfg, B, S):
+    x = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    params = jax.eval_shape(
+        lambda: moe_lib.init_moe(jax.random.PRNGKey(0), cfg)[0]
+    )
+
+    def f(p, x):
+        out, aux = moe_lib.moe_apply(p, x, cfg)
+        return out
+
+    costs = program_costs(f, params, x)
+    m = cfg.moe
+    useful = 2.0 * 3 * cfg.d_model * m.d_ff * m.top_k * B * S  # active expert flops
+    return costs.flops, useful
+
+
+def main(argv=None):
+    base = archs.get("qwen3-moe-30b-a3b")
+    print(f"{'cell':<18} {'cf':>5} {'staged GF':>10} {'useful GF':>10} {'ratio':>6}")
+    for name, B, S in (("train-like", 8, 4096), ("decode-like", 128, 1)):
+        for cf in (1.0, 1.25, 2.0):
+            cfg = base.replace(moe=dataclasses.replace(base.moe, capacity_factor=cf))
+            staged, useful = measure(cfg, B, S)
+            print(f"{name:<18} {cf:>5.2f} {staged/1e9:>10.1f} {useful/1e9:>10.1f} "
+                  f"{useful/staged:>6.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

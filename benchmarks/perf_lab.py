@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf lab: lower+compile named config VARIANTS of the hillclimb cells and
+log their roofline terms to experiments/perf/ — the §Perf iteration record.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.perf_lab [--only name] [--mesh single]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.configs import archs
+from repro.launch.dryrun import analyze, lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES
+from benchmarks.roofline import recompute_terms
+
+
+def variant(name, arch, shape, **overrides):
+    return dict(name=name, arch=arch, shape=shape, overrides=overrides)
+
+
+VARIANTS = [
+    # --- gemma2-9b train: escape the small-model TP trap ------------------
+    variant("gemma2-9b_train_fsdp", "gemma2-9b", "train_4k",
+            parallel_mode="fsdp"),
+    variant("gemma2-9b_train_fsdp_pure", "gemma2-9b", "train_4k",
+            parallel_mode="fsdp_pure"),
+    variant("gemma2-9b_train_pp", "gemma2-9b", "train_4k",
+            pp_stages=16, pp_micro=64),
+    # --- mamba2 train: same trap, smaller model ---------------------------
+    variant("mamba2_train_fsdp_pure", "mamba2-780m", "train_4k",
+            parallel_mode="fsdp_pure"),
+    # --- qwen2-72b train: FSDP x micro gather traffic ----------------------
+    variant("qwen2-72b_train_fsdp_micro1", "qwen2-72b", "train_4k",
+            micro_steps=1),
+    variant("qwen2-72b_train_pp", "qwen2-72b", "train_4k",
+            pp_stages=16, pp_micro=64),
+    # --- serving modes ------------------------------------------------------
+    variant("qwen2-72b_decode_tp", "qwen2-72b", "decode_32k"),
+    variant("kimi_decode_tp2d", "kimi-k2-1t-a32b", "decode_32k",
+            serve_parallel_mode="tp2d"),
+    variant("kimi_train_pp", "kimi-k2-1t-a32b", "train_4k",
+            pp_stages=16, pp_micro=64),
+]
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None)
+    p.add_argument("--out", default="experiments/perf")
+    args = p.parse_args(argv)
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh()
+
+    for v in VARIANTS:
+        if args.only and args.only not in v["name"]:
+            continue
+        out = out_dir / f"{v['name']}.json"
+        if out.exists():
+            print(f"CACHED {v['name']}")
+            continue
+        cfg = archs.get(v["arch"]).replace(**v["overrides"])
+        shape = SHAPES[v["shape"]]
+        print(f"LOWER {v['name']} ...", flush=True)
+        t0 = time.time()
+        try:
+            lowered, staged = lower_cell(cfg, shape, mesh)
+            compiled = lowered.compile()
+        except Exception as e:
+            print(f"  FAILED: {e}")
+            out.write_text(json.dumps({"name": v["name"], "error": str(e)}))
+            continue
+        d = recompute_terms(
+            analyze(compiled, staged, cfg, shape, mesh, 0, time.time() - t0)
+        )
+        d["variant"] = v["name"]
+        d["overrides"] = {k: str(val) for k, val in v["overrides"].items()}
+        out.write_text(json.dumps(d, indent=2))
+        rf = d["roofline"]
+        print(
+            f"  OK {time.time()-t0:.0f}s compute={rf['compute_s']:.2f}s "
+            f"mem={rf['memory_s']:.2f}s coll={rf['collective_s']:.2f}s "
+            f"dominant={rf['dominant']} MFU={rf['roofline_mfu']*100:.1f}%",
+            flush=True,
+        )
+    print("PERF LAB DONE")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""Roofline table builder: aggregates the dry-run JSONs into the
+EXPERIMENTS.md table (one row per arch x shape x mesh) and picks the three
+hillclimb cells (worst roofline fraction / most collective-bound / most
+paper-representative).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+       [--md]   (emit the markdown table)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+ARCH_ORDER = [
+    "mamba2-780m", "gemma2-9b", "gemma2-27b", "granite-20b", "qwen2-72b",
+    "jamba-1.5-large-398b", "qwen3-moe-30b-a3b", "kimi-k2-1t-a32b",
+    "whisper-base", "qwen2-vl-72b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+ICI_BW = 50e9
+PEAK = 197e12
+
+# transit-byte factors per collective kind (ring algorithms, large-n limit):
+# all-reduce moves ~2x the tensor over the wire; gather/scatter/a2a/permute ~1x
+TRANSIT_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def recompute_terms(r: Dict) -> Dict:
+    """Refine the stored roofline with transit-byte collective accounting."""
+    by_kind = r["collectives"]["bytes_by_kind"]
+    transit = sum(TRANSIT_FACTOR.get(k, 1.0) * v for k, v in by_kind.items())
+    rf = dict(r["roofline"])
+    rf["collective_s"] = transit / ICI_BW
+    terms = {k: rf[k] for k in ("compute_s", "memory_s", "collective_s")}
+    rf["dominant"] = max(terms, key=terms.get)
+    rf["bound_step_seconds"] = max(terms.values())
+    rf["roofline_mfu"] = (
+        rf["model_flops_per_device"] / max(rf["bound_step_seconds"], 1e-12) / PEAK
+    )
+    out = dict(r)
+    out["roofline"] = rf
+    return out
+
+
+def load_rows(d: pathlib.Path, mesh: str) -> List[Dict]:
+    rows = []
+    for f in sorted((d / mesh).glob("*.json")):
+        data = recompute_terms(json.loads(f.read_text()))
+        rows.append(data)
+    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    return f"{x*1e3:7.1f}ms"
+
+
+def table(rows: List[Dict], md: bool = False) -> str:
+    hdr = (
+        f"{'arch':<22} {'shape':<12} {'comp':>9} {'mem':>9} {'coll':>9} "
+        f"{'dominant':<12} {'useful':>6} {'MFU':>6} {'GB/dev':>7}"
+    )
+    sep = "-" * len(hdr)
+    lines = [hdr, sep]
+    if md:
+        lines = [
+            "| arch | shape | compute | memory | collective | dominant | useful | roofline-MFU | state GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|",
+        ]
+    for r in rows:
+        rf = r["roofline"]
+        dom = rf["dominant"].replace("_s", "")
+        gb = r.get("state_bytes_per_device", 0) / 1e9
+        if md:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {fmt_s(rf['compute_s']).strip()} "
+                f"| {fmt_s(rf['memory_s']).strip()} | {fmt_s(rf['collective_s']).strip()} "
+                f"| {dom} | {rf['useful_flops_ratio']:.2f} | {rf['roofline_mfu']*100:.1f}% "
+                f"| {gb:.1f} |"
+            )
+        else:
+            lines.append(
+                f"{r['arch']:<22} {r['shape']:<12} {fmt_s(rf['compute_s'])} "
+                f"{fmt_s(rf['memory_s'])} {fmt_s(rf['collective_s'])} "
+                f"{dom:<12} {rf['useful_flops_ratio']:>6.2f} "
+                f"{rf['roofline_mfu']*100:>5.1f}% {gb:>7.1f}"
+            )
+    return "\n".join(lines)
+
+
+def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline MFU / most collective-bound / paper-representative."""
+    trains = [r for r in rows if r["kind"] == "train"]
+    worst = min(trains, key=lambda r: r["roofline"]["roofline_mfu"])
+    coll = max(
+        rows,
+        key=lambda r: r["roofline"]["collective_s"]
+        / max(r["roofline"]["bound_step_seconds"], 1e-12),
+    )
+    # paper-representative: the TDM-FL communication path stresses DP-axis
+    # exchange of params — the biggest DP-traffic train cell:
+    rep = max(trains, key=lambda r: r["roofline"]["collective_s"])
+    return {"worst_mfu": worst, "most_collective": coll, "paper_representative": rep}
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--md", action="store_true")
+    args = p.parse_args(argv)
+    rows = load_rows(pathlib.Path(args.dir), args.mesh)
+    print(table(rows, md=args.md))
+    picks = pick_hillclimb_cells(rows)
+    print("\nhillclimb picks:")
+    for k, r in picks.items():
+        print(f"  {k}: {r['arch']} x {r['shape']} "
+              f"(MFU {r['roofline']['roofline_mfu']*100:.1f}%, "
+              f"dominant {r['roofline']['dominant']})")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure plus
+the framework's own perf tables.
+
+  fig3        paper Fig. 3 — get1meas vs getMeas clique scaling (wall time)
+  gossip      paper P2 quantified — consensus speed per TDM topology
+  moe         MoE dispatch useful-FLOPs vs capacity factor
+  tdm         collective bytes/ops of the TDM primitives (subprocess: 8 devs)
+  roofline    the 40-cell dry-run roofline table (reads experiments/dryrun)
+
+``python -m benchmarks.run``            runs everything quick
+``python -m benchmarks.run --only fig3 --full``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import subprocess
+import sys
+
+
+def _banner(name: str):
+    print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None)
+    p.add_argument("--full", action="store_true", help="paper-size sweeps")
+    args = p.parse_args(argv)
+    want = lambda n: args.only is None or args.only == n
+
+    if want("fig3"):
+        _banner("fig3: paper Fig.3 — TDM primitive scaling over a clique")
+        from benchmarks import fig3_tdm_scaling
+        fig3_tdm_scaling.main(["--full"] if args.full else [])
+
+    if want("gossip"):
+        _banner("gossip: consensus speed per TDM topology (paper P2)")
+        from benchmarks import gossip_convergence
+        gossip_convergence.main([])
+
+    if want("moe"):
+        _banner("moe: dispatch useful-FLOPs vs capacity factor")
+        from benchmarks import moe_dispatch
+        moe_dispatch.main([])
+
+    if want("tdm"):
+        _banner("tdm: collective bytes of get1meas / getMeas / int8 (8 devices)")
+        root = pathlib.Path(__file__).resolve().parents[1]
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.tdm_collectives"],
+            cwd=root,
+            env={**os.environ, "PYTHONPATH": f"{root/'src'}:{root}"},
+            capture_output=True, text=True, timeout=1200,
+        )
+        print(proc.stdout)
+        if proc.returncode != 0:
+            print(proc.stderr)
+            raise SystemExit("tdm_collectives failed")
+
+    if want("roofline"):
+        _banner("roofline: 40-cell dry-run table (single-pod 16x16)")
+        from benchmarks import roofline
+        d = pathlib.Path("experiments/dryrun")
+        if (d / "single").exists():
+            roofline.main(["--mesh", "single"])
+        else:
+            print("experiments/dryrun/single missing — run "
+                  "`python -m repro.launch.dryrun --mesh single` first")
+
+    print("\nall benchmarks done")
+
+
+if __name__ == "__main__":
+    main()

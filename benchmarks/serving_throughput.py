@@ -1,0 +1,50 @@
+"""Serving-throughput roofline per decode cell: tokens/s/chip and
+latency-per-token bounds from the dry-run artifacts — the numbers a serving
+capacity planner actually wants.
+
+    latency_bound  = max(compute_s, memory_s, collective_s)   per step
+    tokens/s/chip  = global_batch / latency_bound / chips
+    batch-1 floor  = params_bytes/chip / HBM_bw  (weights-read floor)
+
+Run: PYTHONPATH=src:. python -m benchmarks.serving_throughput
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from benchmarks.roofline import ARCH_ORDER, recompute_terms
+from repro.configs import archs
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--mesh", default="single")
+    args = p.parse_args(argv)
+    d = pathlib.Path(args.dir) / args.mesh
+
+    print(f"{'arch':<22} {'cell':<12} {'ms/token':>9} {'tok/s/chip':>11} "
+          f"{'bound':<10} {'weights-floor ms':>16}")
+    for f in sorted(d.glob("*.json")):
+        r = recompute_terms(json.loads(f.read_text()))
+        if r["kind"] != "decode":
+            continue
+        rf = r["roofline"]
+        step = rf["bound_step_seconds"]
+        chips = r["chips"]
+        batch = {"decode_32k": 128, "long_500k": 1}[r["shape"]]
+        tok_s_chip = batch / step / chips
+        cfg = archs.get(r["arch"])
+        wbytes = cfg.param_count() * 2 / chips  # bf16 serving cast
+        floor_ms = wbytes / 819e9 * 1e3
+        print(f"{r['arch']:<22} {r['shape']:<12} {step*1e3:>9.2f} "
+              f"{tok_s_chip:>11.2f} {rf['dominant'].replace('_s',''):<10} "
+              f"{floor_ms:>16.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""End-to-end driver: decentralized FL over a Walker constellation's
+time-varying ISL visibility schedule — the paper's motivating deployment.
+
+8 satellites (= 8 forced host devices), each training a reduced LM on its
+OWN data shard; communication happens ONLY through the paper's universal
+TDM algorithm (getMeas -> matchings -> ppermute). Every round:
+
+    local SGD steps  ->  TDM exchange over the slot's visibility relation
+
+The script reports loss and consensus distance per round, then simulates a
+satellite failure: the schedule is restricted (paper skip-slot semantics)
+and training continues with the survivors.
+
+Run:  PYTHONPATH=src python examples/train_fl_constellation.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import archs
+from repro.core.schedule import WalkerConstellation
+from repro.data import pipeline
+from repro.launch import fl_train
+from repro.launch.elastic import reschedule
+from repro.models.config import ShapeConfig
+from repro.optim import adamw
+
+
+N_SATS = 8
+ROUNDS = 10
+LOCAL_STEPS = 2
+
+
+def main():
+    cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
+    opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
+    fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
+    shape = ShapeConfig("fl", "train", 32, 4)   # per-sat batch of 4 rows
+
+    mesh = jax.make_mesh((N_SATS,), ("data",))
+    constellation = WalkerConstellation(total=N_SATS, planes=2)
+    state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, N_SATS)
+
+    def stacked_batch(round_idx):
+        per_node = []
+        for sat in range(N_SATS):
+            bs = [
+                pipeline.host_batch(cfg, shape, step=round_idx * LOCAL_STEPS + h,
+                                    seed=1000 + sat)
+                for h in range(LOCAL_STEPS)
+            ]
+            per_node.append({
+                k: np.stack([b[k] for b in bs]) for k in bs[0]
+            })
+        return {
+            k: jnp.asarray(np.stack([pn[k] for pn in per_node]))
+            for k in per_node[0]
+        }
+
+    print(f"{N_SATS} satellites, Walker {constellation.planes}-plane, "
+          f"TDM-FL ({fl_cfg.local_steps} local steps/round)")
+    alive = set(range(N_SATS))
+    round_fns = {}
+    for rnd in range(ROUNDS):
+        rel = constellation.visibility(rnd).restrict(alive)
+        key = tuple(sorted(rel.pairs))
+        if key not in round_fns:
+            round_fns[key] = fl_train.build_fl_round(
+                cfg, opt_cfg, mesh, N_SATS, fl_cfg, rel
+            )
+        state, losses = round_fns[key](state, stacked_batch(rnd))
+        dist = fl_train.consensus_distance(state["params"])
+        print(f"round {rnd:2d}  mean-loss {float(losses.mean()):7.4f}  "
+              f"consensus-dist {dist:.4f}  links {len(rel)//2}")
+        if rnd == 6:
+            alive -= {3}
+            print("  !! satellite 3 lost — rescheduling (skip-slot semantics)")
+    print("done — surviving satellites converged together "
+          f"(consensus {fl_train.consensus_distance(state['params']):.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""The paper's contribution: universal TDM communication over ISLs.
+
+- relation.py    R ⊆ A×A exchange relations (paper §II, properties P1–P5)
+- schedule.py    TDM schedules, edge coloring, Walker constellations
+- ptbfla_sim.py  paper-faithful Algorithm 1 (getMeas) discrete-event oracle
+- tdm.py         TPU-native getMeas/get1meas as shard_map collectives
+- gossip.py      mixing matrices, spectral gaps, propagation closure (P2)
+- fl.py          the 3 generic FLAs: centralized / decentralized / TDM
+- compress.py    ISL payload compression (top-k + error feedback, int8)
+"""
+
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule

@@ -1,0 +1,327 @@
+"""The three PTB-FLA generic algorithms, as first-class framework features.
+
+Paper §III.A: "New PTB-FLA version offers: (1) the generic centralized FLA,
+(2) the generic decentralized FLA, and (3) the new generic universal TDM
+communication algorithm."
+
+Each algorithm exists in two semantically-equivalent forms:
+
+1. **Simulator form** (``*_sim``) — message-passing over the paper-faithful
+   discrete-event testbed (:mod:`repro.core.ptbfla_sim`), with the paper's
+   callback structure (server/client processing functions). This is the
+   oracle.
+2. **Collective form** — SPMD functions designed to run inside ``shard_map``
+   over a mesh axis, where satellites are node groups along the ``data`` /
+   ``pod`` axes and exchanges lower to ``ppermute``/``psum`` (DESIGN.md §3).
+
+The TDM FLA is the paper's contribution: decentralized learning where the
+per-round communication is *exactly* the universal TDM exchange ``getMeas``
+over a (possibly time-varying) relation schedule — e.g. the visibility graph
+of a Walker constellation — rather than a star or a clique.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as compress_lib
+from repro.core import tdm
+from repro.core.gossip import metropolis_weights, uniform_neighbor_weights
+from repro.core.ptbfla_sim import PTBFLASimulator, _Node, _as_gen
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule, clique_multilink
+
+
+# ===========================================================================
+# Simulator (oracle) forms — the paper's callback-style generic algorithms
+# ===========================================================================
+
+def centralized_fla_sim(
+    n_nodes: int,
+    server_id: int,
+    client_fn: Callable[[Any, Any], Any],
+    server_fn: Callable[[Any, List[Any]], Any],
+    client_data: Dict[int, Any],
+    server_data: Any,
+    n_rounds: int = 1,
+    seed: int = 0,
+) -> Any:
+    """Generic centralized FLA (star topology), per round:
+
+    1. server sends its current model to every client,
+    2. client i computes ``client_fn(model, client_data[i])``,
+    3. clients send updates back; server sets
+       ``model = server_fn(model, updates)``.
+
+    Communication uses the same sendMsg/rcvMsg substrate as Algorithm 1 (the
+    star is the materialization of the abstract graph in centralized mode).
+    Returns the server's final model.
+    """
+    sim = PTBFLASimulator(n_nodes, seed=seed)
+    clients = [i for i in range(n_nodes) if i != server_id]
+
+    def server_prog(node: _Node):
+        model = server_data
+        for _ in range(n_rounds):
+            for c in clients:
+                sim.send_msg(node.node_id, c, [node.time_slot, node.node_id, model])
+            updates = []
+            for _ in clients:
+                while not node.inbox:
+                    yield None  # block on recv
+                msg = node.inbox.popleft()
+                node.n_received += 1
+                updates.append(msg[2])
+            model = server_fn(model, updates)
+            node.time_slot += 1
+        return model
+
+    def make_client(cid: int):
+        def prog(node: _Node):
+            result = None
+            for _ in range(n_rounds):
+                while not node.inbox:
+                    yield None
+                msg = node.inbox.popleft()
+                node.n_received += 1
+                model = msg[2]
+                result = client_fn(model, client_data.get(cid))
+                sim.send_msg(cid, server_id, [node.time_slot, cid, result])
+                node.time_slot += 1
+            return result
+
+        return prog
+
+    programs = {server_id: server_prog}
+    for c in clients:
+        programs[c] = make_client(c)
+    results = sim.run(programs)
+    return results[server_id]
+
+
+def decentralized_fla_sim(
+    n_nodes: int,
+    update_fn: Callable[[Any, List[Any]], Any],
+    node_data: Dict[int, Any],
+    n_rounds: int = 1,
+    seed: int = 0,
+) -> Dict[int, Any]:
+    """Generic decentralized FLA: the clique materialization. Every round,
+    every node exchanges its value with all others (this is exactly getMeas
+    over the clique relation — the paper's evaluation scenario) and applies
+    ``update_fn(own, peer_values)``. Returns each node's final value."""
+    sim = PTBFLASimulator(n_nodes, seed=seed)
+    rel = Relation.clique(list(range(n_nodes)))
+
+    def make_prog(node_id: int):
+        def prog(node: _Node):
+            value = node_data[node_id]
+            peer_ids = rel.peers_of(node_id)
+            for _ in range(n_rounds):
+                got = yield from _as_gen(sim.get_meas(node, peer_ids, value))
+                value = update_fn(value, got)
+            return value
+
+        return prog
+
+    return sim.run({i: make_prog(i) for i in range(n_nodes)})
+
+
+def tdm_fla_sim(
+    schedule: TDMSchedule,
+    n_nodes: int,
+    local_fn: Callable[[int, int, Any], Any],
+    mix_fn: Callable[[Any, List[Any]], Any],
+    init: Dict[int, Any],
+    seed: int = 0,
+) -> Tuple[Dict[int, Any], PTBFLASimulator]:
+    """The paper's contribution as an FL algorithm: per slot t, each node
+
+    1. runs its local computation ``local_fn(node, t, value)`` (e.g. a local
+       SGD step on its own data / its own orbital measurement),
+    2. exchanges the result with its slot-t peers via **getMeas** (skipping
+       the slot when it has no peers — the `odata=None` case),
+    3. mixes: ``value = mix_fn(own, peer_values)``.
+
+    Returns each node's final value plus the simulator (message stats).
+    """
+    sim = PTBFLASimulator(n_nodes, seed=seed)
+
+    def make_prog(node_id: int):
+        def prog(node: _Node):
+            value = init[node_id]
+            for t, rel in enumerate(schedule):
+                value = local_fn(node_id, t, value)
+                peer_ids = rel.peers_of(node_id)
+                odata = value if peer_ids else None
+                got = yield from _as_gen(sim.get_meas(node, peer_ids, odata))
+                if got is not None:
+                    value = mix_fn(value, got)
+            return value
+
+        return prog
+
+    results = sim.run({i: make_prog(i) for i in range(n_nodes)})
+    return results, sim
+
+
+# ===========================================================================
+# Collective (SPMD) forms — run inside shard_map over a mesh axis
+# ===========================================================================
+
+def centralized_round(update: Any, axis_name: str) -> Any:
+    """FedAvg aggregation. In SPMD the star's up-link + server-average +
+    down-link collapses into one all-reduce-mean over the node axis (the
+    server is virtual — every node deterministically computes the same
+    aggregate, which is bit-identical to receiving it from a server)."""
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), update)
+
+
+def decentralized_round(value: Any, axis_name: str, n: int) -> Any:
+    """Generic decentralized FLA round over the clique: every node averages
+    its value with all peers' (uniform weights 1/n). Implemented as the TDM
+    clique exchange — NOT pmean — so the lowering is the paper's multi-link
+    getMeas (n-1 simultaneous ppermutes), benchmarkable against get1meas."""
+    rel = Relation.clique(list(range(n)))
+
+    def avg(x):
+        total = tdm.neighbor_sum(x, rel, axis_name) + x
+        return total / n
+
+    return jax.tree.map(avg, value)
+
+
+@dataclass(frozen=True)
+class TDMFLAConfig:
+    """Config for the universal TDM FLA (collective form).
+
+    comm: 'getmeas'      — multi-link; matchings issued concurrently (paper)
+          'get1meas'     — single-link; matchings serialized (the baseline
+                           primitive the paper generalizes)
+    compression: 'none' | 'int8' | 'topk'
+    topk_k: payload size for 'topk'
+    local_steps: local optimizer steps between TDM slots (H in local-SGD)
+    """
+
+    comm: str = "getmeas"
+    compression: str = "none"
+    topk_k: int = 64
+    choco_gamma: float = 0.4
+    local_steps: int = 1
+
+    def __post_init__(self):
+        if self.comm not in ("getmeas", "get1meas"):
+            raise ValueError(f"unknown comm mode {self.comm}")
+        if self.compression not in ("none", "int8", "topk"):
+            raise ValueError(f"unknown compression {self.compression}")
+
+
+def tdm_mix(
+    x: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    cfg: TDMFLAConfig = TDMFLAConfig(),
+    residual: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """One TDM-FLA mixing step for a single array over relation ``rel``.
+
+    Metropolis-weighted gossip x_i <- W_ii x_i + sum_j W_ij x_j where the
+    neighbor values travel via the selected TDM primitive, optionally
+    compressed. Isolated nodes keep their value (paper skip-slot).
+    Returns (mixed, new_residual) — residual is used by top-k error feedback.
+    """
+    if len(rel) == 0:
+        return x, residual
+    if cfg.compression == "topk":
+        # CHOCO-Gossip: the provably-convergent way to gossip ABSOLUTE
+        # values under sparsified exchange (naive error feedback only works
+        # for additive deltas — see tdm.neighbor_sum_topk's contract).
+        state = residual if isinstance(residual, tdm.ChocoState) else tdm.choco_init(x)
+        mixed, new_state = tdm.choco_gossip_round(
+            x, state, rel, axis_name, n, cfg.topk_k, gamma=cfg.choco_gamma
+        )
+        return mixed, new_state
+    if cfg.compression == "int8":
+        w = 1.0 / (1.0 + rel.max_degree())
+        summed = tdm.neighbor_sum_int8(x, rel, axis_name)
+        idx = jax.lax.axis_index(axis_name)
+        deg = jnp.asarray([rel.degree(v) for v in range(n)], dtype=x.dtype)[idx]
+        mixed = x + w * (summed - deg * x)
+        return mixed, residual
+    # Uncompressed: full Metropolis gossip via the selected primitive.
+    if cfg.comm == "getmeas":
+        return tdm.gossip_avg(x, rel, axis_name, n), residual
+    # get1meas: serialized matchings — same algebra, chained transfers.
+    W = metropolis_weights(rel, n)
+    idx = jax.lax.axis_index(axis_name)
+    self_w = jnp.asarray(np.diag(W), dtype=x.dtype)[idx]
+    out = self_w * x
+    peer_data, mask = tdm.get1_meas(x, rel, axis_name, n)
+    # weight received values: receiver i applies W[i, peer_p] to its p-th peer
+    max_deg = rel.max_degree()
+    wmat = np.zeros((n, max_deg))
+    for i in range(n):
+        for p, j in enumerate(rel.peers_of(i)):
+            wmat[i, p] = W[i, j]
+    w_row = jnp.asarray(wmat, dtype=x.dtype)[idx]  # (max_deg,)
+    out = out + jnp.sum(
+        w_row.reshape((-1,) + (1,) * x.ndim) * peer_data.astype(x.dtype), axis=0
+    )
+    return out, residual
+
+
+def tdm_fla_round(
+    params: Any,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    cfg: TDMFLAConfig = TDMFLAConfig(),
+    residuals: Any = None,
+) -> Tuple[Any, Any]:
+    """Apply :func:`tdm_mix` to every leaf of a parameter pytree."""
+    leaves, treedef = jax.tree.flatten(params)
+    if residuals is None:
+        res_leaves = [None] * len(leaves)
+    else:
+        res_leaves = jax.tree.flatten(
+            residuals, is_leaf=lambda x: isinstance(x, tdm.ChocoState)
+        )[0]
+    out, new_res = [], []
+    for leaf, res in zip(leaves, res_leaves):
+        mixed, r = tdm_mix(leaf, rel, axis_name, n, cfg, res)
+        out.append(mixed)
+        new_res.append(r)
+    return jax.tree.unflatten(treedef, out), jax.tree.unflatten(treedef, new_res)
+
+
+# ===========================================================================
+# Convergence math (used by tests + EXPERIMENTS.md §Paper-validation)
+# ===========================================================================
+
+def consensus_error(values: Sequence[np.ndarray]) -> float:
+    """Max_i ||x_i - mean|| / ||mean|| — disagreement across the node set."""
+    stack = np.stack([np.asarray(v, dtype=np.float64) for v in values])
+    mean = stack.mean(axis=0)
+    denom = max(float(np.linalg.norm(mean)), 1e-30)
+    return float(np.max(np.linalg.norm(stack - mean, axis=tuple(range(1, stack.ndim))))) / denom
+
+
+def rounds_to_consensus(
+    W: np.ndarray, tol: float = 1e-6, max_rounds: int = 100_000
+) -> int:
+    """Rounds of mixing with matrix W until worst-case disagreement < tol
+    (from the spectral gap: (1-gap)^t < tol)."""
+    from repro.core.gossip import spectral_gap
+
+    gap = spectral_gap(W)
+    if gap <= 0:
+        return -1
+    t = int(np.ceil(np.log(tol) / np.log(max(1e-12, 1.0 - gap))))
+    return min(t, max_rounds)

@@ -1,0 +1,346 @@
+"""TPU-native universal TDM communication: the paper's getMeas/get1meas as
+JAX collectives.
+
+Adaptation (DESIGN.md §3): a per-slot exchange relation R is edge-colored
+into matchings (Misra–Gries, ≤ Δ+1); each matching is a permutation of the
+node axis and lowers to ONE ``jax.lax.ppermute``. The paper's two primitives
+then differ only in scheduling:
+
+- ``get_meas``  — all matchings issued in one slot, as independent ops; XLA
+  overlaps the collective-permutes across distinct ICI links. This is the
+  multi-antenna satellite: k peers ⇒ k simultaneous links.
+- ``get1_meas`` — one matching per slot with an explicit data-dependency
+  chain (``optimization_barrier``) so transfers serialize. This is the
+  single-antenna satellite, i.e. the original PTB-FLA primitive.
+
+The paper's `timeSlotsMap` reorder buffer has no TPU counterpart because XLA
+delivers collectives deterministically; its *purpose* (letting fast peers
+run ahead) is served by XLA's async collective start/done scheduling.
+
+All functions here are designed to run inside ``shard_map`` over the node
+axis (the mesh's ``data`` axis; satellites = data-parallel node groups), and
+are tested for bit-equivalence against the paper-faithful simulator
+(:mod:`repro.core.ptbfla_sim`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compress as compress_lib
+from repro.core.gossip import metropolis_weights
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule, edge_coloring
+
+
+# ---------------------------------------------------------------------------
+# Static (Python-side) schedule preprocessing
+# ---------------------------------------------------------------------------
+
+def matching_permutation(matching: Relation) -> List[Tuple[int, int]]:
+    """ppermute `perm` pairs for one matching: every pair (i, j) ∈ M means
+    "i sends to j"; M symmetric ⇒ both directions present ⇒ a permutation
+    restricted to participants (non-participants send/receive nothing and
+    ppermute fills their output with zeros)."""
+    return sorted(matching.pairs)
+
+
+def peer_slot_table(rel: Relation, n: int) -> Tuple[np.ndarray, List[Relation]]:
+    """Static map from (node, peer-position) -> matching color.
+
+    ``table[i, p]`` = index of the matching that carries the exchange between
+    node i and its p-th peer (peers in ``rel.peers_of(i)`` order, the paper's
+    `peer_ids` list), or -1 past the node's degree.
+    """
+    matchings = edge_coloring(rel)
+    max_deg = rel.max_degree()
+    table = -np.ones((n, max(max_deg, 1)), dtype=np.int32)
+    for i in range(n):
+        for p, j in enumerate(rel.peers_of(i)):
+            for c, m in enumerate(matchings):
+                if (i, j) in m:
+                    table[i, p] = c
+                    break
+            assert table[i, p] >= 0, f"edge ({i},{j}) missing from coloring"
+    return table, matchings
+
+
+# ---------------------------------------------------------------------------
+# Collective primitives (call inside shard_map over `axis_name`)
+# ---------------------------------------------------------------------------
+
+def exchange_matching(x: jax.Array, matching: Relation, axis_name: str) -> jax.Array:
+    """One pairwise exchange round: ppermute along the node axis."""
+    perm = matching_permutation(matching)
+    if not perm:
+        return jnp.zeros_like(x)
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+def get_meas(
+    x: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    participate: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Universal TDM exchange (paper Algorithm 1), multi-link.
+
+    Every node sends ``x`` to all its peers in relation ``rel`` and receives
+    each peer's ``x``. Returns ``(peer_data, peer_mask)``:
+
+    - ``peer_data``: (max_deg, *x.shape) — entry p is the data received from
+      this node's p-th peer (in ``rel.peers_of`` order = the paper's
+      `peer_ids`), zeros where the node has fewer peers.
+    - ``peer_mask``: (max_deg,) bool — valid entries.
+
+    ``participate`` (scalar bool per node) implements the paper's
+    `odata=None` skip: a skipping node sends zeros and its peers mask it out
+    — the static-schedule analogue of assumption (b). For full fidelity the
+    *schedule* should drop the node (``Relation.restrict``); this dynamic
+    flag covers in-flight stragglers.
+    """
+    if participate is not None:
+        x = jnp.where(participate, x, jnp.zeros_like(x))
+    table, matchings = peer_slot_table(rel, n)
+    max_deg = rel.max_degree()
+    if max_deg == 0:
+        z = jnp.zeros((1,) + x.shape, x.dtype)
+        return z, jnp.zeros((1,), dtype=bool)
+    # One ppermute per matching; independent ops => XLA overlaps them
+    # (multi-antenna simultaneous links).
+    received = jnp.stack(
+        [exchange_matching(x, m, axis_name) for m in matchings]
+    )  # (n_matchings, *x.shape)
+    idx = jax.lax.axis_index(axis_name)
+    my_slots = jnp.asarray(table)[idx]            # (max_deg,) int32
+    mask = my_slots >= 0
+    safe = jnp.maximum(my_slots, 0)
+    peer_data = received[safe]                    # (max_deg, *x.shape)
+    peer_data = jnp.where(
+        mask.reshape((-1,) + (1,) * x.ndim), peer_data, jnp.zeros_like(peer_data)
+    )
+    return peer_data, mask
+
+
+def get1_meas(
+    x: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Original pairwise TDM primitive: same exchanges as ``get_meas`` but
+    matchings are SERIALIZED (single antenna — one link at a time). The
+    explicit dependency chain prevents XLA from overlapping the permutes,
+    which is exactly the hardware constraint being modeled."""
+    table, matchings = peer_slot_table(rel, n)
+    max_deg = rel.max_degree()
+    if max_deg == 0:
+        z = jnp.zeros((1,) + x.shape, x.dtype)
+        return z, jnp.zeros((1,), dtype=bool)
+    received = []
+    carry = x
+    for m in matchings:
+        carry = jax.lax.optimization_barrier(carry)
+        got = exchange_matching(carry, m, axis_name)
+        received.append(got)
+        # chain: next slot's send depends on this slot's receive
+        carry = jax.lax.optimization_barrier(x + 0 * got.astype(x.dtype))
+    received = jnp.stack(received)
+    idx = jax.lax.axis_index(axis_name)
+    my_slots = jnp.asarray(table)[idx]
+    mask = my_slots >= 0
+    safe = jnp.maximum(my_slots, 0)
+    peer_data = received[safe]
+    peer_data = jnp.where(
+        mask.reshape((-1,) + (1,) * x.ndim), peer_data, jnp.zeros_like(peer_data)
+    )
+    return peer_data, mask
+
+
+def neighbor_sum(x: jax.Array, rel: Relation, axis_name: str) -> jax.Array:
+    """Σ_{j ∈ N(i)} x_j — the reduction most FL updates need. Cheaper than
+    ``get_meas`` (no stacking): one ppermute per matching, summed."""
+    matchings = edge_coloring(rel)
+    out = jnp.zeros_like(x)
+    for m in matchings:
+        out = out + exchange_matching(x, m, axis_name)
+    return out
+
+
+def gossip_avg(
+    x: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+) -> jax.Array:
+    """One Metropolis gossip step x_i ← W_ii x_i + Σ_j W_ij x_j over R.
+
+    Per-edge weights vary (they depend on both endpoint degrees), so each
+    matching carries its own per-node weight vector (static constants).
+    """
+    W = metropolis_weights(rel, n)
+    matchings = edge_coloring(rel)
+    idx = jax.lax.axis_index(axis_name)
+    self_w = jnp.asarray(np.diag(W), dtype=x.dtype)[idx]
+    out = self_w * x
+    for m in matchings:
+        # weight this node applies to the value received via matching m
+        w_m = np.zeros((n,))
+        for (i, j) in m.pairs:
+            w_m[i] = W[i, j]
+        recv = exchange_matching(x, m, axis_name)
+        out = out + jnp.asarray(w_m, dtype=x.dtype)[idx] * recv
+    return out
+
+
+def gossip_avg_tree(params, rel: Relation, axis_name: str, n: int):
+    """gossip_avg over every leaf of a pytree (model params / grads)."""
+    return jax.tree.map(lambda p: gossip_avg(p, rel, axis_name, n), params)
+
+
+# ---------------------------------------------------------------------------
+# Compressed exchange (beyond-paper: ISL bandwidth saver)
+# ---------------------------------------------------------------------------
+
+def neighbor_sum_int8(x: jax.Array, rel: Relation, axis_name: str) -> jax.Array:
+    """neighbor_sum with int8-quantized payloads: 4× less ICI traffic at
+    <1% relative error (see tests). Scales travel alongside as fp32."""
+    payload = compress_lib.int8_compress(x)
+    matchings = edge_coloring(rel)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for m in matchings:
+        q = exchange_matching(payload.q, m, axis_name)
+        s = exchange_matching(payload.scale[None], m, axis_name)[0]
+        out = out + q.astype(jnp.float32) * s
+    return out.astype(x.dtype)
+
+
+def neighbor_sum_topk(
+    x: jax.Array, residual: jax.Array, rel: Relation, axis_name: str, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """neighbor_sum with top-k sparsified payloads + error feedback.
+
+    Correct usage: ``x`` must be an additive DELTA (gradient, model update) —
+    error feedback preserves convergence for accumulated deltas (Stich et
+    al. 2018), NOT for absolute-value gossip (use :func:`choco_gossip_round`
+    for that). Returns (sum of decompressed neighbor payloads, new
+    residual). Traffic per edge: 8k bytes instead of 4·numel.
+    """
+    payload, new_residual = compress_lib.topk_with_error_feedback(x, residual, k)
+    matchings = edge_coloring(rel)
+    out = jnp.zeros(x.size, dtype=jnp.float32)
+    for m in matchings:
+        vals = exchange_matching(payload.values, m, axis_name)
+        idxs = exchange_matching(payload.indices, m, axis_name)
+        got_any = exchange_matching(jnp.ones((), jnp.float32), m, axis_name)
+        contrib = jnp.zeros(x.size, dtype=jnp.float32).at[idxs].add(
+            vals.astype(jnp.float32)
+        )
+        out = out + got_any * contrib
+    return out.reshape(x.shape).astype(x.dtype), new_residual
+
+
+class ChocoState(NamedTuple):
+    """Per-node CHOCO-Gossip state for one tensor.
+
+    x_hat — this node's *public* copy (what peers believe it holds);
+    s     — running Σ_j W_ij x̂_j over the FIXED relation (maintained
+            incrementally from the received compressed updates, so no
+            per-neighbor buffers are needed).
+    """
+
+    x_hat: jax.Array
+    s: jax.Array
+
+
+def choco_init(x: jax.Array) -> ChocoState:
+    return ChocoState(x_hat=jnp.zeros_like(x), s=jnp.zeros_like(x))
+
+
+def choco_gossip_round(
+    x: jax.Array,
+    state: ChocoState,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    k: int,
+    gamma: float = 0.4,
+) -> Tuple[jax.Array, ChocoState]:
+    """One CHOCO-Gossip round (Koloskova et al., ICML 2019) over relation R
+    with top-k compression — converging consensus under compressed exchange
+    of *absolute values* (which naive error feedback does not give):
+
+        q_i   = top_k(x_i - x̂_i)            (compressed public update)
+        x̂_i  += q_i ;  s_i += Σ_j W_ij q_j   (incremental public copies)
+        x_i  += γ (s_i - d_i x̂_i)            where d_i = Σ_j W_ij
+
+    Requires the SAME relation every round (the incremental ``s`` is tied to
+    W); time-varying schedules should use int8 (stateless) compression.
+    """
+    W = metropolis_weights(rel, n)
+    idx = jax.lax.axis_index(axis_name)
+    payload = compress_lib.topk_compress(x - state.x_hat, k)
+    q_dense = compress_lib.topk_decompress(payload, x.shape, x.dtype)
+    new_x_hat = state.x_hat + q_dense
+    matchings = edge_coloring(rel)
+    s = state.s
+    for m in matchings:
+        vals = exchange_matching(payload.values, m, axis_name)
+        idxs = exchange_matching(payload.indices, m, axis_name)
+        contrib = (
+            jnp.zeros(x.size, dtype=jnp.float32)
+            .at[idxs]
+            .add(vals.astype(jnp.float32))
+            .reshape(x.shape)
+        )
+        # weight by W[i, peer-under-matching-m]
+        w_m = np.zeros((n,), dtype=np.float32)
+        for (i, j) in m.pairs:
+            w_m[i] = W[i, j]
+        s = s + jnp.asarray(w_m, x.dtype)[idx] * contrib.astype(x.dtype)
+    deg_w = np.zeros((n,), dtype=np.float32)
+    for i in range(n):
+        deg_w[i] = sum(W[i, j] for j in rel.peers_of(i))
+    d_i = jnp.asarray(deg_w, x.dtype)[idx]
+    new_x = x + gamma * (s - d_i * new_x_hat)
+    return new_x, ChocoState(x_hat=new_x_hat, s=s)
+
+
+# ---------------------------------------------------------------------------
+# Whole-schedule execution + hierarchical (multi-pod) TDM
+# ---------------------------------------------------------------------------
+
+def run_gossip_schedule(
+    x: jax.Array, schedule: TDMSchedule, axis_name: str, n: int
+) -> jax.Array:
+    """Apply one gossip step per slot, in slot order (paper P2: the composed
+    relation's propagation; associativity lets XLA pipeline across slots)."""
+    for rel in schedule:
+        if len(rel) == 0:
+            continue
+        x = gossip_avg(x, rel, axis_name, n)
+    return x
+
+
+def hierarchical_gossip(
+    x: jax.Array,
+    intra_rel: Relation,
+    inter_rel: Relation,
+    data_axis: str,
+    pod_axis: str,
+    n_data: int,
+    n_pods: int,
+) -> jax.Array:
+    """Multi-pod TDM: gossip within each pod over `data_axis` (dense ICI),
+    then between pods over `pod_axis` (sparse DCI/optical — the actual
+    inter-satellite links in the constellation analogy)."""
+    x = gossip_avg(x, intra_rel, data_axis, n_data)
+    if len(inter_rel) > 0:
+        x = gossip_avg(x, inter_rel, pod_axis, n_pods)
+    return x

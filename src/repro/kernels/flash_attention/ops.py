@@ -1,0 +1,64 @@
+"""jit'd public wrapper for the flash attention kernel.
+
+Handles layout: (B, S, H, hd) model layout -> (B*H, S, hd) kernel layout,
+GQA head folding (no KV repeat — the kernel's BlockSpec maps head h to kv
+head h // G), head_dim padding to the MXU lane width (128), and the
+interpret switch for CPU validation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,        # (B, Sq, H, hd)
+    k: jax.Array,        # (B, Skv, KV, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+
+    # MXU lane alignment: pad head_dim to 128 (zeros don't change qk^T or pv)
+    hd_pad = max(128, -(-hd // 128) * 128)
+    if hd_pad != hd:
+        pad = ((0, 0), (0, 0), (0, 0), (0, hd_pad - hd))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        # qk^T over zero-padded lanes is exact; the scale must still use the
+        # ORIGINAL head_dim — the kernel derives it from the padded shape, so
+        # pre-scale q here to compensate.
+        q = q * jnp.asarray((hd_pad / hd) ** 0.5, q.dtype)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd_pad)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd_pad)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd_pad)
+
+    out = flash_attention_fwd(
+        qf, kf, vf,
+        group=G, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    out = out.reshape(B, H, Sq, hd_pad).transpose(0, 2, 1, 3)
+    return out[..., :hd]

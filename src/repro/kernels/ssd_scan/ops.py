@@ -1,0 +1,44 @@
+"""jit'd wrapper for the SSD kernel: model layout (B,S,H,P) + per-head A
+and group-shared B/C -> kernel layout (B*H, S, ...)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    xh: jax.Array,     # (B, S, H, P)
+    dt: jax.Array,     # (B, S, H) fp32 post-softplus
+    A: jax.Array,      # (H,) fp32 negative
+    Bv: jax.Array,     # (B, S, G, N) group-shared
+    Cv: jax.Array,     # (B, S, G, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    B_, S, H, P = xh.shape
+    G, N = Bv.shape[2], Bv.shape[3]
+    r = H // G
+    xf = xh.transpose(0, 2, 1, 3).reshape(B_ * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B_ * H, S, 1).astype(jnp.float32)
+    Af = jnp.broadcast_to(A[None, :], (B_, H)).reshape(B_ * H, 1).astype(jnp.float32)
+    # expand groups -> heads (broadcast, then fold)
+    Bh = jnp.broadcast_to(
+        Bv[:, :, :, None, :], (B_, S, G, r, N)
+    ).transpose(0, 2, 3, 1, 4).reshape(B_ * H, S, N)
+    Ch = jnp.broadcast_to(
+        Cv[:, :, :, None, :], (B_, S, G, r, N)
+    ).transpose(0, 2, 3, 1, 4).reshape(B_ * H, S, N)
+
+    y, state = ssd_scan_fwd(
+        xf, dtf, Af, Bh, Ch, chunk=chunk, interpret=interpret
+    )
+    y = y.reshape(B_, H, S, P).transpose(0, 2, 1, 3)
+    state = state.reshape(B_, H, P, N)
+    return y, state

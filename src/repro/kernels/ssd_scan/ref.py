@@ -1,0 +1,46 @@
+"""Pure-jnp sequential-scan oracle for the SSD kernel.
+
+The exact recurrence, one timestep at a time (O(S) sequential — slow but
+unambiguous):
+
+    S_t = exp(dt_t * A) * S_{t-1} + dt_t * (B_t ⊗ x_t)
+    y_t = C_t · S_t
+
+Layout matches the kernel: x (BH, S, P), dt (BH, S) [post-softplus],
+A (BH,) negative, B/C (BH, S, N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jax.Array,      # (BH, S, P)
+    dt: jax.Array,     # (BH, S) fp32
+    A: jax.Array,      # (BH,) fp32, negative
+    B: jax.Array,      # (BH, S, N)
+    C: jax.Array,      # (BH, S, N)
+    init_state=None,   # (BH, P, N)
+):
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    xf = x.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(state, t):
+        decay = jnp.exp(dt[:, t] * A)                      # (BH,)
+        outer = jnp.einsum("bp,bn->bpn", xf[:, t], Bf[:, t])
+        state = decay[:, None, None] * state + dt[:, t][:, None, None] * outer
+        y_t = jnp.einsum("bn,bpn->bp", Cf[:, t], state)
+        return state, y_t
+
+    state0 = (
+        jnp.zeros((BH, P, N), jnp.float32) if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    state, ys = jax.lax.scan(step, state0, jnp.arange(S))
+    y = ys.transpose(1, 0, 2).astype(x.dtype)              # (BH, S, P)
+    return y, state

@@ -1,0 +1,38 @@
+"""jit'd wrappers for blockwise int8 TDM payload compression."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tdm_compress.tdm_compress import dequantize_fwd, quantize_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_payload(
+    x: jax.Array, *, block: int = 1024, interpret: bool = False
+) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Any-shaped tensor -> (int8 payload, blockwise scales, orig shape)."""
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    q, s = quantize_fwd(flat, block=block, interpret=interpret)
+    return q, s, shape
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "block", "interpret"))
+def dequantize_payload(
+    q: jax.Array, scales: jax.Array, shape: Tuple[int, ...], *,
+    block: int = 1024, interpret: bool = False,
+) -> jax.Array:
+    x = dequantize_fwd(q, scales, block=block, interpret=interpret)
+    n = 1
+    for d in shape:
+        n *= d
+    return x[:n].reshape(shape)

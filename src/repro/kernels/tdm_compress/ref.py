@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for blockwise int8 TDM payload compression."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, block: int = 1024):
+    """x: flat (n,) fp32, n % block == 0 -> (q int8 (n,), scales (n/block,))."""
+    n = x.shape[0]
+    nb = n // block
+    xb = x.reshape(nb, block).astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(n), scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 1024):
+    n = q.shape[0]
+    nb = n // block
+    return (q.reshape(nb, block).astype(jnp.float32) * scale[:, None]).reshape(n)

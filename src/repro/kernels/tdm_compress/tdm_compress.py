@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: blockwise int8 quantization of TDM payloads.
+
+The ISL (ICI) link is the scarce resource in constellation-scale TDM
+exchange (DESIGN.md §3); quantizing gossip payloads to int8 on-chip before
+``ppermute`` cuts link bytes 4x. One fused pass per block: absmax reduce ->
+scale -> round/clip -> int8 store, blocked to VMEM-sized tiles.
+
+Grid (n/block,); tiles (block,) live fully in VMEM (block = 1024 fp32 =
+4 KiB in, 1 KiB out). Scales are written per block (fp32).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (1, block)
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q_ref[...] = q
+    s_ref[0, 0] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+
+
+def quantize_fwd(x: jax.Array, *, block: int = 1024, interpret: bool = False):
+    """x: flat (n,) -> (q int8 (n,), scales fp32 (n/block,))."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    x2 = x.reshape(nb, block)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.int8),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+    )(x2)
+    return q.reshape(n), s.reshape(nb)
+
+
+def dequantize_fwd(q: jax.Array, scales: jax.Array, *, block: int = 1024,
+                   interpret: bool = False):
+    n = q.shape[0]
+    nb = n // block
+    x = pl.pallas_call(
+        _dequant_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+    )(q.reshape(nb, block), scales.reshape(nb, 1))
+    return x.reshape(n)

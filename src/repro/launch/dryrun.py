@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, and extract the roofline terms from the compiled
+artifact.
+
+MUST be run as its own process (the device count above is locked at first
+jax init — hence the two lines before any other import).
+
+Per cell this writes ``<out>/<mesh>/<arch>__<shape>.json`` with:
+  - memory_analysis (per-device argument/output/temp/code bytes)
+  - cost_analysis   (per-device HLO flops / bytes accessed)
+  - collective op bytes/counts by kind (parsed from the partitioned HLO)
+  - the three roofline terms in seconds + the dominant term
+  - MODEL_FLOPS (6·N_active·D or 2·N_active·D) and the useful-flops ratio
+
+Usage:
+  python -m repro.launch.dryrun --mesh single --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --mesh both          # all 32 valid cells x 2
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import archs
+from repro.launch import sharding as shlib
+from repro.launch import steps as steps_lib
+from repro.launch.flops import program_costs
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.models import registry
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def cfg_fingerprint(cfg: ModelConfig) -> str:
+    return hashlib.sha256(repr(cfg).encode()).hexdigest()[:16]
+
+
+def sharded_bytes(shapes_tree, shardings_tree, mesh) -> int:
+    """Per-device bytes of a sharded pytree (analytic)."""
+    total = 0
+    flat_s = jax.tree.leaves(shapes_tree)
+    flat_sh = jax.tree.leaves(
+        shardings_tree, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)
+    )
+    for s, sh in zip(flat_s, flat_sh):
+        n = int(np.prod(s.shape)) if s.shape else 1
+        shard_factor = 1
+        if isinstance(sh, jax.sharding.NamedSharding):
+            for ax in sh.spec:
+                if ax is None:
+                    continue
+                key = ax if isinstance(ax, (tuple, list)) else (ax,)
+                for k in key:
+                    shard_factor *= mesh.shape[k]
+        total += -(-n // shard_factor) * s.dtype.itemsize
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per row
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Build + lower the right step function for a cell.
+
+    Returns (lowered, staged_costs) — staged_costs are the exact jaxpr-level
+    flops / fusion-aware traffic (global shapes), see launch/flops.py.
+
+    Sharding mode: cfg.train_mode for training cells; cfg.serve_parallel_mode
+    for prefill/decode (serving never pays FSDP gather-per-token).
+    """
+    if shape.kind != "train":
+        mode = cfg.serve_parallel_mode
+    elif cfg.pp_stages > 0:
+        mode = "pp"
+    else:
+        mode = cfg.train_mode
+    rules = shlib.rules_for(mesh, mode)
+    opt_cfg = adamw.OptConfig(dtype=cfg.opt_dtype)
+    in_specs = registry.input_specs(cfg, shape)
+    batch_sh = steps_lib.batch_shardings(cfg, shape, rules)
+
+    if shape.kind == "train":
+        if cfg.pp_stages > 0:
+            from repro.launch import pipeline as pp_lib
+
+            n_micro = cfg.pp_micro or 4 * cfg.pp_stages
+            fn, cfgp = pp_lib.build_pp_train_step(
+                cfg, opt_cfg, rules, cfg.pp_stages, n_micro
+            )
+            st_specs = steps_lib.state_specs(cfgp, opt_cfg)
+            st_sh = steps_lib.state_shardings(cfgp, opt_cfg, rules)
+        else:
+            st_specs = steps_lib.state_specs(cfg, opt_cfg)
+            st_sh = steps_lib.state_shardings(cfg, opt_cfg, rules)
+            fn = steps_lib.build_train_step(cfg, opt_cfg, rules)
+        costs = program_costs(fn, st_specs, in_specs)
+        jf = jax.jit(
+            fn,
+            in_shardings=(st_sh, batch_sh),
+            out_shardings=(st_sh, None),
+            donate_argnums=(0,),
+        )
+        with mesh:
+            return jf.lower(st_specs, in_specs), costs
+
+    p_shapes, p_specs = registry.param_specs(cfg)
+    # serving runs on a bf16 cast of the checkpoint (params are read-only;
+    # fp32 master copies are a training concern — 2x HBM for nothing here)
+    p_shapes = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s,
+        p_shapes,
+    )
+    p_sh = shlib.param_shardings(rules, p_specs, p_shapes)
+    if shape.kind == "prefill":
+        fn = steps_lib.build_prefill_step(cfg, shape, rules)
+        cache_sh = steps_lib.cache_shardings(cfg, shape, rules)
+        costs = program_costs(fn, p_shapes, in_specs)
+        jf = jax.jit(
+            fn,
+            in_shardings=(p_sh, batch_sh),
+            out_shardings=(None, {"pos": None, "units": cache_sh["units"]}),
+        )
+        with mesh:
+            return jf.lower(p_shapes, in_specs), costs
+
+    # decode
+    fn = steps_lib.build_decode_step(cfg, rules)
+    cache_shapes = registry.cache_specs(cfg, shape)
+    cache_sh = steps_lib.cache_shardings(cfg, shape, rules)
+    costs = program_costs(fn, p_shapes, cache_shapes, in_specs)
+    jf = jax.jit(
+        fn,
+        in_shardings=(p_sh, cache_sh, batch_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    with mesh:
+        return jf.lower(p_shapes, cache_shapes, in_specs), costs
+
+
+def analyze(compiled, staged, cfg, shape, mesh, lower_s, compile_s):
+    n_chips = mesh.size
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = {
+            k: float(v)
+            for k, v in ca.items()
+            if np.isscalar(v) and k in ("flops", "bytes accessed", "transcendentals")
+        }
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    # staged (jaxpr-exact) costs are GLOBAL; divide by chips for per-device.
+    # (XLA cost_analysis counts scan bodies once — kept only as a reference.)
+    flops_dev = staged.flops / n_chips
+    bytes_dev = staged.traffic_bytes / n_chips
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / n_chips
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    step_s = max(terms.values())
+    mfu = (mf_dev / max(step_s, 1e-12)) / PEAK_FLOPS_BF16 if step_s else 0.0
+
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "kind": shape.kind,
+        "mesh": list(mesh.shape.values()),
+        "mesh_axes": list(mesh.shape.keys()),
+        "chips": n_chips,
+        "fingerprint": cfg_fingerprint(cfg),
+        "mode": cfg.train_mode if shape.kind == "train" else cfg.serve_parallel_mode,
+        "micro_steps": cfg.micro_steps,
+        "opt_dtype": cfg.opt_dtype,
+        "param_dtype": cfg.param_dtype,
+        "lower_seconds": lower_s,
+        "compile_seconds": compile_s,
+        "staged_costs": {
+            "flops_global": staged.flops,
+            "traffic_bytes_global": staged.traffic_bytes,
+            "transcendentals_global": staged.transcendentals,
+        },
+        "xla_cost_analysis_per_body": cost,
+        "memory_analysis": mem,
+        "collectives": coll.to_json(),
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_total": mf,
+            "model_flops_per_device": mf_dev,
+            "hlo_flops_per_device": flops_dev,
+            "useful_flops_ratio": useful,
+            "bound_step_seconds": step_s,
+            "roofline_mfu": mfu,
+        },
+        "hlo_bytes": len(hlo),
+    }
+
+
+def run_cell(name: str, shape_name: str, mesh_kind: str, out_dir: pathlib.Path,
+             skip_existing: bool = True) -> dict | None:
+    shape = SHAPES[shape_name]
+    cfg = archs.cfg_for_cell(archs.get(name), shape)
+    if cfg is None:
+        print(f"SKIP {name} x {shape_name} (inapplicable: full attention at 500k)")
+        return None
+    out = out_dir / mesh_kind / f"{name}__{shape_name}.json"
+    if skip_existing and out.exists():
+        try:
+            data = json.loads(out.read_text())
+            if data.get("fingerprint") == cfg_fingerprint(cfg):
+                print(f"CACHED {name} x {shape_name} [{mesh_kind}]")
+                return data
+        except Exception:
+            pass
+    out.parent.mkdir(parents=True, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    print(f"LOWER {name} x {shape_name} [{mesh_kind}] ...", flush=True)
+    t0 = time.time()
+    lowered, staged = lower_cell(cfg, shape, mesh)
+    t1 = time.time()
+    print(f"  lowered in {t1-t0:.1f}s; compiling ...", flush=True)
+    compiled = lowered.compile()
+    t2 = time.time()
+    data = analyze(compiled, staged, cfg, shape, mesh, t1 - t0, t2 - t1)
+    # analytic per-device state bytes (complements memory_analysis)
+    if shape.kind != "train":
+        mode = cfg.serve_parallel_mode
+    else:
+        mode = "pp" if cfg.pp_stages > 0 else cfg.train_mode
+    rules = shlib.rules_for(mesh, mode)
+    opt_cfg = adamw.OptConfig(dtype=cfg.opt_dtype)
+    if shape.kind == "train":
+        st_specs = steps_lib.state_specs(cfg, opt_cfg)
+        st_sh = steps_lib.state_shardings(cfg, opt_cfg, rules)
+        data["state_bytes_per_device"] = sharded_bytes(st_specs, st_sh, mesh)
+    else:
+        p_shapes, p_specs = registry.param_specs(cfg)
+        p_sh = shlib.param_shardings(rules, p_specs, p_shapes)
+        data["state_bytes_per_device"] = sharded_bytes(p_shapes, p_sh, mesh)
+        if shape.kind == "decode":
+            cache_shapes = registry.cache_specs(cfg, shape)
+            cache_sh = steps_lib.cache_shardings(cfg, shape, rules)
+            data["cache_bytes_per_device"] = sharded_bytes(
+                cache_shapes, cache_sh, mesh
+            )
+    out.write_text(json.dumps(data, indent=2))
+    r = data["roofline"]
+    print(
+        f"  OK compile={t2-t1:.1f}s compute={r['compute_s']*1e3:.2f}ms "
+        f"memory={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
+        f"dominant={r['dominant']} useful={r['useful_flops_ratio']:.2f}",
+        flush=True,
+    )
+    return data
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--out", default="experiments/dryrun")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    names = list(archs.ARCHS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for mesh_kind in meshes:
+        for name in names:
+            for shape_name in shapes:
+                try:
+                    run_cell(name, shape_name, mesh_kind, out_dir,
+                             skip_existing=not args.force)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((mesh_kind, name, shape_name, str(e)))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

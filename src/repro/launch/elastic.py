@@ -1,0 +1,95 @@
+"""Fault tolerance and elasticity.
+
+Mechanisms (all exercised by tests/examples; hardware failure itself is
+simulated — this container has one CPU):
+
+1. **Checkpoint/restart** — launch/train.py saves every K steps (async,
+   zstd, sha256-verified); --restore resumes bit-exact (the synthetic data
+   pipeline is a pure function of step, so the token stream replays).
+2. **Elastic reshard-on-restore** — checkpoints are mesh-agnostic;
+   ``restore_for_mesh`` re-places every tensor for whatever mesh the new
+   job has (checkpoint.restore + make_array_from_callback shard-by-shard).
+3. **TDM rescheduling on node loss** — the paper's skip-slot semantics:
+   a dead/occluded satellite is dropped from every slot's relation
+   (``Relation.restrict``); remaining exchanges stay valid (tested
+   property), and gossip re-mixes the survivors.
+4. **Straggler mitigation** — slot-deadline policy: a node that misses the
+   slot deadline is treated as ``odata=None`` (participate=False masks its
+   payload in tdm.get_meas); gradient accumulation (cfg.micro_steps)
+   smooths per-step jitter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Set
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule
+from repro.launch import sharding as shlib
+from repro.launch import steps as steps_lib
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class HealthTracker:
+    """Heartbeat bookkeeping for the node set (satellites / hosts)."""
+
+    n_nodes: int
+    deadline_s: float = 10.0
+    last_seen: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, node: int, t: Optional[float] = None) -> None:
+        self.last_seen[node] = time.monotonic() if t is None else t
+
+    def alive(self, now: Optional[float] = None) -> Set[int]:
+        now = time.monotonic() if now is None else now
+        return {
+            i for i in range(self.n_nodes)
+            if now - self.last_seen.get(i, -1e18) <= self.deadline_s
+        }
+
+    def dead(self, now: Optional[float] = None) -> Set[int]:
+        return set(range(self.n_nodes)) - self.alive(now)
+
+
+def reschedule(schedule: TDMSchedule, alive: Iterable[int]) -> TDMSchedule:
+    """Drop failed nodes from every slot (paper skip-slot semantics)."""
+    return schedule.restrict(alive)
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotDeadline:
+    """Straggler policy: who participates in the current slot.
+
+    ``participate(progress, slot_deadline)`` returns the boolean mask the
+    TDM collective consumes — late nodes ship zeros and are masked by their
+    peers, exactly the paper's `odata=None` assumption (b)."""
+
+    deadline_steps: int
+
+    def participate(self, node_progress: np.ndarray, slot_step: int) -> np.ndarray:
+        return node_progress >= slot_step - self.deadline_steps
+
+
+def restore_for_mesh(
+    ckpt_dir: str,
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    mesh,
+    step: Optional[int] = None,
+):
+    """Elastic restart: restore the latest checkpoint RESHARDED for ``mesh``
+    (which may have a different size/topology than the mesh that saved it)."""
+    rules = shlib.rules_for(mesh, cfg.fsdp)
+    target = steps_lib.state_specs(cfg, opt_cfg)
+    shardings = steps_lib.state_shardings(cfg, opt_cfg, rules)
+    with mesh:
+        return ckpt_lib.restore(ckpt_dir, step=step, target=target,
+                                shardings=shardings)

@@ -1,0 +1,136 @@
+"""PTB-FLA training mode: satellites = node groups, each training on local
+data, communicating ONLY via the paper's generic algorithms.
+
+Implementation: parameters get a leading ``node`` axis sharded over the
+mesh's node axis; one ``shard_map`` spans local compute + the TDM exchange,
+so the per-slot relation literally becomes the collective schedule
+(matchings -> ppermute, DESIGN.md §3). Three modes:
+
+- ``centralized``   — FedAvg via all-reduce-mean every H steps
+- ``decentralized`` — clique gossip (the paper's getMeas evaluation case)
+- ``tdm``           — gossip over an arbitrary TDM schedule (Walker
+                      visibility, ring, hypercube, ...), optionally int8 /
+                      top-k (CHOCO) compressed
+
+Fault tolerance: a failed/occluded satellite is dropped from the slot's
+relation (``Relation.restrict``) — the paper's skip-slot semantics — and the
+others keep training; its params re-sync through later gossip rounds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import fl, tdm
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule
+from repro.models import registry
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    mode: str = "tdm"               # centralized | decentralized | tdm
+    local_steps: int = 1            # H: optimizer steps between exchanges
+    comm: str = "getmeas"           # getmeas | get1meas (paper primitives)
+    compression: str = "none"       # none | int8 | topk
+    topk_k: int = 64
+
+
+def _stack_init(key, cfg: ModelConfig, opt_cfg, n_nodes: int):
+    """Per-node states, stacked on a leading node axis (node i = seed i)."""
+    states = []
+    for i in range(n_nodes):
+        params, _ = registry.bundle(cfg).init(jax.random.fold_in(key, 0))
+        # same init everywhere (consensus start); opt state is per-node
+        states.append({
+            "params": params,
+            "opt": adamw.init_opt_state(params, opt_cfg),
+            "step": jnp.zeros((), jnp.int32),
+        })
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def build_fl_round(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    mesh: Mesh,
+    n_nodes: int,
+    fl_cfg: FLConfig,
+    rel: Relation,
+    axis: str = "data",
+) -> Callable:
+    """One FL round = local_steps SGD steps on node-local data + one
+    exchange over ``rel``. Returns a jit'd (stacked_state, stacked_batch) ->
+    (stacked_state, metrics) function."""
+    b = registry.bundle(cfg)
+    tdm_cfg = fl.TDMFLAConfig(
+        comm=fl_cfg.comm, compression=fl_cfg.compression, topk_k=fl_cfg.topk_k
+    )
+
+    def node_round(state, batch):
+        # state/batch leading dim = 1 (this node's shard); squeeze it
+        state = jax.tree.map(lambda x: x[0], state)
+        batch = jax.tree.map(lambda x: x[0], batch)
+
+        def one_step(st, mb):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: b.loss_fn(p, mb), has_aux=True
+            )(st["params"])
+            new_p, new_opt, _ = adamw.apply_updates(
+                st["params"], grads, st["opt"], opt_cfg
+            )
+            return {"params": new_p, "opt": new_opt, "step": st["step"] + 1}, loss
+
+        losses = []
+        for h in range(fl_cfg.local_steps):
+            mb = jax.tree.map(lambda x: x[h], batch)
+            state, loss = one_step(state, mb)
+            losses.append(loss)
+        local_loss = jnp.stack(losses).mean()
+
+        # ---- the paper's communication step
+        params = state["params"]
+        if fl_cfg.mode == "centralized":
+            params = fl.centralized_round(params, axis)
+        elif fl_cfg.mode == "decentralized":
+            params = fl.decentralized_round(params, axis, n_nodes)
+        else:
+            params, _ = fl.tdm_fla_round(params, rel, axis, n_nodes, tdm_cfg)
+        state = dict(state, params=params)
+
+        state = jax.tree.map(lambda x: x[None], state)
+        return state, local_loss[None]
+
+    spec_state = P(axis)
+    fn = shard_map(
+        node_round,
+        mesh=mesh,
+        in_specs=(spec_state, spec_state),
+        out_specs=(spec_state, P(axis)),
+        check_rep=False,  # model-internal scans carry node-invariant zeros;
+                          # vma tracking would demand pcasts throughout
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+def consensus_distance(stacked_params) -> float:
+    """Max relative L2 distance of any node's params from the mean."""
+    leaves = jax.tree.leaves(stacked_params)
+    num = 0.0
+    den = 0.0
+    for leaf in leaves:
+        arr = np.asarray(leaf, dtype=np.float64)
+        mean = arr.mean(axis=0, keepdims=True)
+        num += float(np.square(arr - mean).sum())
+        den += float(np.square(mean).sum() * arr.shape[0])
+    return (num / max(den, 1e-30)) ** 0.5

@@ -1,0 +1,209 @@
+"""HLO statistics for the roofline: collective bytes by kind, TRIP-COUNT
+AWARE.
+
+Collective bytes are NOT in cost_analysis, and a naive text scan counts
+while-loop (= lax.scan) bodies once — under-counting every per-layer
+collective by the layer count. This parser reconstructs the computation
+call graph of the partitioned module (compiled.as_text()) and multiplies
+while bodies by their trip count, which XLA materializes as an s32 constant
+inside the loop's condition computation (verified structure; see
+EXPERIMENTS.md §Dry-run notes).
+
+Counted ops: all-reduce, all-gather, reduce-scatter, all-to-all,
+collective-permute (sync and async -start forms; -done skipped). Bytes are
+the RESULT sizes in the per-device program — i.e. bytes landing in each
+device per step, the collective roofline numerator.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branches=\{([^}]*)\}")
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _result_bytes(result_part: str) -> int:
+    return sum(
+        shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(result_part)
+    )
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    count_by_kind: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+    @property
+    def total_count(self) -> float:
+        return float(sum(self.count_by_kind.values()))
+
+    def to_json(self) -> Dict:
+        return {
+            "bytes_by_kind": {k: float(v) for k, v in self.bytes_by_kind.items()},
+            "count_by_kind": {k: float(v) for k, v in self.count_by_kind.items()},
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "unknown_trip_whiles": self.unknown_trip_whiles,
+        }
+
+
+def _split_computations(hlo_text: str) -> Tuple[Dict[str, List[str]], Optional[str]]:
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    current = None
+    depth = 0
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if current is None:
+            m = _COMP_HDR_RE.match(s)
+            if m and s.endswith("{"):
+                current = m.group(1)
+                comps[current] = []
+                if s.startswith("ENTRY"):
+                    entry = current
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            current = None
+            continue
+        comps[current].append(s)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> Optional[int]:
+    consts = []
+    for l in cond_lines:
+        for m in _S32_CONST_RE.finditer(l):
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else None
+
+
+def collective_stats(hlo_text: str, details: Optional[list] = None) -> CollectiveStats:
+    """``details``: optional list; appended with dicts
+    {kind, bytes, trips, total, line} for every collective call-site,
+    trip-multiplied (call sites inside while bodies appear once with their
+    effective multiplier)."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:  # fall back: treat whole text as one computation
+        comps = {"__all__": [l.strip() for l in hlo_text.splitlines()]}
+        entry = "__all__"
+
+    # effective trip multiplier per computation, found by a pre-pass
+    multipliers: Dict[str, float] = defaultdict(float)
+
+    memo: Dict[str, Tuple[Dict[str, float], Dict[str, float], int]] = {}
+
+    def visit(name: str, stack=()) -> Tuple[Dict[str, float], Dict[str, float], int]:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return ({}, {}, 0)
+        by_b: Dict[str, float] = defaultdict(float)
+        by_c: Dict[str, float] = defaultdict(float)
+        unknown = 0
+        for s in comps[name]:
+            # while loops: body x trip
+            mw = _COND_BODY_RE.search(s)
+            if mw and " while(" in s:
+                cond_name, body_name = mw.group(1), mw.group(2)
+                trip = _trip_count(comps.get(cond_name, []))
+                if trip is None:
+                    trip = 1
+                    unknown += 1
+                bb, bc, bu = visit(body_name, stack + (name,))
+                for k, v in bb.items():
+                    by_b[k] += v * trip
+                for k, v in bc.items():
+                    by_c[k] += v * trip
+                unknown += bu
+                continue
+            # conditionals: worst branch
+            mb = _BRANCHES_RE.search(s)
+            if mb:
+                best: Tuple[Dict[str, float], Dict[str, float], int] = ({}, {}, 0)
+                for bname in re.findall(r"%?([\w\.\-]+)", mb.group(1)):
+                    sub = visit(bname, stack + (name,))
+                    if sum(sub[0].values()) > sum(best[0].values()):
+                        best = sub
+                for k, v in best[0].items():
+                    by_b[k] += v
+                for k, v in best[1].items():
+                    by_c[k] += v
+                unknown += best[2]
+                continue
+            # calls / fusions
+            mc = _CALLS_RE.search(s)
+            if mc:
+                sub = visit(mc.group(1), stack + (name,))
+                for k, v in sub[0].items():
+                    by_b[k] += v
+                for k, v in sub[1].items():
+                    by_c[k] += v
+                unknown += sub[2]
+                # fall through: a fused collective won't also match below
+            # direct collectives
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in s or f" {kind}-start(" in s:
+                    eq = s.find(" = ")
+                    idx = s.find(f" {kind}")
+                    if eq < 0 or eq > idx:
+                        continue
+                    nbytes = _result_bytes(s[eq + 3 : idx])
+                    by_b[kind] += nbytes
+                    by_c[kind] += 1
+                    if details is not None:
+                        details.append(
+                            {"kind": kind, "bytes": nbytes, "comp": name,
+                             "line": s[:200]}
+                        )
+                    break
+        out = (dict(by_b), dict(by_c), unknown)
+        memo[name] = out
+        return out
+
+    b, c, u = visit(entry)
+    return CollectiveStats(dict(b), dict(c), u)

@@ -1,0 +1,201 @@
+"""GPipe-style pipeline parallelism, pjit-native.
+
+Formulation (no shard_map): the pipeline's register file is ONE array with
+a leading stage dim, sharded ``stage -> data``:
+
+    h : (n_stages, B_micro, S, D)     stage i holds microbatch activations
+
+One tick = ``jnp.roll(h, 1, axis=0)`` (GSPMD lowers the shift on a sharded
+dim to a collective-permute — exactly the stage-to-stage hop) + inject the
+next microbatch's embeddings at stage 0 + apply every stage's layer block
+in parallel (``jax.vmap`` over the stage dim; einsums stay device-local
+because both operands are stage-sharded). After M + n_stages - 1 ticks all
+microbatches have drained; the collected last-stage outputs go through the
+(stage-free) vocab projection + loss.
+
+Why this beats FSDP for trillion-scale MoE (kimi-k2, EXPERIMENTS.md §Perf):
+weights are STATIONARY — zero gather traffic, and weight grads are LOCAL to
+their stage (no per-microbatch grad reduction). The only inter-stage bytes
+are microbatch activations (seq-sharded over `model` in flight, so the
+per-tick permute moves (B_m, S/16, D)).
+
+Bubble: (S-1)/(M+S-1) of the ticks are ramp/drain — counted honestly in the
+staged FLOPs (the roofline's useful-flops ratio shows it).
+
+Layer-count padding: n_layers is rounded up to a multiple of n_stages with
+inert extra units (outputs masked to passthrough); their params exist but
+receive zero gradient.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as shlib
+from repro.models import registry, transformer
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import embed_tokens, lm_logits, rmsnorm
+from repro.optim import adamw
+
+
+def padded_cfg(cfg: ModelConfig, n_stages: int) -> Tuple[ModelConfig, int, int]:
+    """Round the unit count up to a stage multiple. Returns
+    (cfg_padded, n_units_real, units_per_stage)."""
+    unit_len = len(transformer.scan_unit(cfg))
+    u_real = cfg.n_layers // unit_len
+    u_pad = math.ceil(u_real / n_stages) * n_stages
+    cfgp = cfg.replace(n_layers=u_pad * unit_len)
+    return cfgp, u_real, u_pad // n_stages
+
+
+def build_pp_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    rules: shlib.ShardingRules,
+    n_stages: int,
+    n_micro: int,
+) -> Tuple[Callable, ModelConfig]:
+    """Returns (train_step(state, batch) -> (state, metrics), cfg_padded).
+
+    ``state`` must be built from cfg_padded (extra inert units)."""
+    cfgp, u_real, u_loc = padded_cfg(cfg, n_stages)
+    b = registry.bundle(cfgp)
+
+    def pipeline_hidden(params, tokens, positions):
+        """Run the pipe; returns last-stage hidden states (M, Bm, S, D)."""
+        M = n_micro
+        Bg, S = tokens.shape
+        Bm = Bg // M
+        toks = tokens.reshape(M, Bm, S)
+        D = cfgp.d_model
+
+        # stage-stacked unit params: (n_stages, u_loc, ...)
+        units_r = jax.tree.map(
+            lambda x: x.reshape((n_stages, u_loc) + x.shape[1:]),
+            params["units"],
+        )
+
+        def stage_apply(h, stage_units, stage_idx):
+            """One stage's u_loc units, with inert-pad masking."""
+            def unit_body(carry, xs):
+                hc = carry
+                unit_p, u_local = xs
+                h2, _, _ = transformer._unit_forward(
+                    hc, unit_p, positions, cfgp, None, False, S
+                )
+                u_global = stage_idx * u_loc + u_local
+                hc = jnp.where(u_global < u_real, h2, hc)
+                return shlib.shard_activation(hc, ("batch", "seq", None)), None
+
+            fn = jax.checkpoint(unit_body) if cfgp.remat != "none" else unit_body
+            h, _ = jax.lax.scan(fn, h, (stage_units, jnp.arange(u_loc)))
+            return h
+
+        vmapped_stages = jax.vmap(stage_apply, in_axes=(0, 0, 0))
+        stage_ids = jnp.arange(n_stages)
+
+        def constrain_h(h):
+            return shlib.shard_activation(h, ("stage", "batch", "pp_seq", None))
+
+        # embed ALL microbatches once, outside the tick loop: the
+        # vocab-sharded table is gathered once per step, not once per tick
+        # (measured: 1.46 TB/device of per-tick table gathers on kimi).
+        embeds = embed_tokens(params["embed"], toks.reshape(M * Bm, S), cfgp)
+        embeds = embeds.reshape(M, Bm, S, D)
+        embeds = shlib.shard_activation(embeds, (None, "batch", "pp_seq", None))
+
+        def tick(carry, t):
+            # The tick carry rides seq-sharded over `model` (15 MB/device on
+            # kimi instead of 235 MB full-seq); stages gather to full seq
+            # ONCE at entry and reshard at exit. The whole tick is
+            # checkpointed: only the (small) carries survive to the backward
+            # pass — without this, every tick's internal residuals are saved
+            # (measured 143 GB/device of temps).
+            h = carry                                  # (n_stages, Bm, S, D)
+            h = jnp.roll(h, 1, axis=0)                 # stage hop (ppermute)
+            m_in = jnp.clip(t, 0, M - 1)
+            x0 = jax.lax.dynamic_index_in_dim(embeds, m_in, 0, keepdims=False)
+            h = jax.lax.dynamic_update_index_in_dim(h, x0.astype(h.dtype), 0, 0)
+            # gather to full seq for the stage compute (bf16, one AG)
+            h = shlib.shard_activation(h, ("stage", "batch", "seq", None))
+            h = vmapped_stages(h, units_r, stage_ids)
+            # reshard seq->model for the hop + the saved carry (one RS)
+            h = constrain_h(h)
+            out = h[n_stages - 1]                      # valid when t >= S-1
+            return h, out
+
+        h0 = jnp.zeros((n_stages, Bm, S, D), embeds.dtype)
+        ticks = M + n_stages - 1
+        # NOTE tick-level remat is a memory/collective trade: checkpointing
+        # ticks halves bwd temps but re-runs every stage's TP exchanges in
+        # the recompute (kimi: 63s -> 98s collective). We keep the faster
+        # schedule; 1F1B scheduling is the proper memory fix (future work,
+        # EXPERIMENTS.md §Perf iteration 3).
+        _, outs = jax.lax.scan(tick, constrain_h(h0), jnp.arange(ticks))
+        # outs[t] = last-stage output at tick t; micro m exits at t = m+S-1
+        hidden = jax.lax.slice_in_dim(outs, n_stages - 1, ticks, axis=0)
+        return hidden                                   # (M, Bm, S, D)
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        Bg, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (Bg // n_micro, S))
+        if cfgp.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+        hidden = pipeline_hidden(params, tokens, positions)
+        M, Bm = hidden.shape[0], hidden.shape[1]
+        h = hidden.reshape(M * Bm, S, -1)
+        # exit the pipe: loss compute resharded batch -> (pod+)data x vocab
+        h = jax.lax.with_sharding_constraint(
+            h, rules.sharding_for(("loss_batch", "seq", None), h.shape)
+        )
+        h = rmsnorm(h, params["final_ln"], cfgp.norm_eps)
+        y = labels.reshape(M * Bm, S)
+
+        chunk = min(cfgp.loss_chunk, S)
+        nch = S // chunk
+        h_c = h.reshape(M * Bm, nch, chunk, -1).transpose(1, 0, 2, 3)
+        y_c = y.reshape(M * Bm, nch, chunk).transpose(1, 0, 2)
+
+        def chunk_loss(carry, xs):
+            hc, yc = xs
+            logits = lm_logits(params["embed"], hc, cfgp)
+            logits = jax.lax.with_sharding_constraint(
+                logits,
+                rules.sharding_for(("loss_batch", None, "vocab"), logits.shape),
+            )
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+            return carry + jnp.sum(lse - gold), None
+
+        total, _ = jax.lax.scan(
+            jax.checkpoint(chunk_loss), jnp.zeros((), jnp.float32), (h_c, y_c)
+        )
+        loss = total / (Bg * S)
+        return loss, {"ce_loss": loss}
+
+    def train_step(state, batch):
+        with shlib.use_rules(rules):
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch
+            )
+            new_p, new_opt, opt_metrics = adamw.apply_updates(
+                state["params"], grads, state["opt"], opt_cfg
+            )
+        return (
+            {"params": new_p, "opt": new_opt, "step": state["step"] + 1},
+            {"loss": loss, **metrics, **opt_metrics},
+        )
+
+    return train_step, cfgp
+
+
+def pp_bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,132 @@
+"""Serving driver: batched prefill + decode loop with a continuous-batching
+style slot manager (requests join/leave the batch between steps).
+
+CPU demo:
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
+      --requests 6 --max-new 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import archs
+from repro.launch import steps as steps_lib
+from repro.models import registry
+from repro.models.config import ShapeConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class BatchedServer:
+    """Fixed-width decode batch; free slots are refilled from the queue
+    after each prefill (padded prompts share one prefill shape bucket)."""
+
+    def __init__(self, cfg, batch: int, max_len: int, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.bundle = registry.bundle(cfg)
+        self.params, _ = self.bundle.init(jax.random.PRNGKey(seed))
+        self._decode = jax.jit(self.bundle.decode_fn)
+        self._prefill = jax.jit(
+            lambda p, b: self.bundle.prefill_fn(p, b, max_len)
+        )
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}
+        self.cache = None
+        self.steps = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Admit up to `batch` queued requests as one padded prefill."""
+        if not self.queue or self.active:
+            return
+        admitted = self.queue[: self.batch]
+        self.queue = self.queue[self.batch :]
+        plen = max(len(r.prompt) for r in admitted)
+        toks = np.zeros((self.batch, plen), np.int32)
+        for i, r in enumerate(admitted):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+            self.active[i] = r
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        self.cache = cache
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        for i, r in self.active.items():
+            r.out.append(int(nxt[i]))
+        self._last = nxt
+
+    def step(self) -> bool:
+        """One decode step for the active batch. Returns False when idle."""
+        self._admit()
+        if not self.active:
+            return False
+        tok = jnp.asarray(self._last[:, None])
+        logits, self.cache = self._decode(self.params, self.cache, {"token": tok})
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+        self._last = nxt
+        self.steps += 1
+        finished = [i for i, r in self.active.items() if r.done]
+        for i, r in list(self.active.items()):
+            if not r.done:
+                r.out.append(int(nxt[i]))
+        if len(finished) == len(self.active) and finished:
+            self.active.clear()
+            self.cache = None
+        return bool(self.active) or bool(self.queue)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=8)
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = archs.get(args.arch)
+    if args.smoke:
+        cfg = archs.smoke_cfg(cfg)
+    max_len = args.prompt_len + args.max_new + 8
+    srv = BatchedServer(cfg, args.batch, max_len, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    for rid in range(args.requests):
+        srv.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+            max_new=args.max_new,
+        ))
+    t0 = time.time()
+    while srv.step():
+        pass
+    dt = time.time() - t0
+    total_tokens = args.requests * args.max_new
+    print(f"served {args.requests} requests, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, {srv.steps} steps)")
+    return srv
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Logical-axis sharding: the single place where model-internal axis names
+meet the physical mesh.
+
+Models annotate parameters (via the ``specs`` trees returned by ``init_*``)
+and activations (via :func:`shard_activation`) with LOGICAL names; the
+launch layer activates a :class:`ShardingRules` mapping logical -> mesh axes
+for the current mesh. Outside any rules context (unit tests, single device)
+everything is a no-op.
+
+Two standard rule sets are provided:
+
+- ``tp_rules``     — tensor/expert parallel over ``model``; batch over
+                     ``(pod, data)``; params replicated over ``data``.
+- ``fsdp_rules``   — tp_rules + ZeRO-3: the ``embed`` (or widest) dim of
+                     every weight additionally sharded over ``data``;
+                     XLA inserts all-gather-on-use / reduce-scatter-on-grad.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    logical_to_mesh: Dict[str, Any] = field(default_factory=dict)
+
+    def spec_for(self, logical: Tuple) -> P:
+        axes = []
+        used = set()
+        for name in logical:
+            mesh_axis = self.logical_to_mesh.get(name)
+            # an axis can be consumed only once per spec; later dims replicate
+            if mesh_axis is None:
+                axes.append(None)
+                continue
+            key = tuple(mesh_axis) if isinstance(mesh_axis, (tuple, list)) else (mesh_axis,)
+            if any(k in used for k in key):
+                axes.append(None)
+                continue
+            # drop axes whose mesh extent doesn't divide... divisibility is
+            # checked by the caller (sharding_for) with the array shape.
+            axes.append(mesh_axis)
+            used.update(key)
+        return P(*axes)
+
+    def sharding_for(self, logical: Tuple, shape: Tuple[int, ...]) -> NamedSharding:
+        """NamedSharding for an array, dropping mesh axes that don't divide
+        the corresponding dim (e.g. kv_heads=8 on a model axis of 16)."""
+        spec = list(self.spec_for(logical))
+        fixed = []
+        for dim, ax in zip(shape, spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            key = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+            extent = 1
+            for k in key:
+                extent *= self.mesh.shape[k]
+            fixed.append(ax if dim % extent == 0 else None)
+        fixed += [None] * (len(shape) - len(fixed))
+        return NamedSharding(self.mesh, P(*fixed))
+
+
+_ACTIVE: contextvars.ContextVar[Optional[ShardingRules]] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    token = _ACTIVE.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.reset(token)
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _ACTIVE.get()
+
+
+def shard_activation(x: jax.Array, logical: Tuple) -> jax.Array:
+    """Annotate an activation with logical axes (no-op without rules).
+
+    Rank-adaptive: under vmap (pipeline stages) arrays gain leading dims;
+    those map to the "stage" logical axis so stage-sharded activations stay
+    stage-sharded instead of being forced replicated."""
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    if x.ndim > len(logical):
+        logical = ("stage",) * (x.ndim - len(logical)) + tuple(logical)
+    sh = rules.sharding_for(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def param_shardings(rules: ShardingRules, specs: Any, params_shape: Any) -> Any:
+    """Map a specs tree + eval_shape tree -> NamedSharding tree."""
+    is_spec = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, (str, type(None))) for x in s
+    )
+    return jax.tree.map(
+        lambda s, p: rules.sharding_for(s, p.shape),
+        specs,
+        params_shape,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rule sets
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh) -> Any:
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+def tp_rules(mesh: Mesh) -> ShardingRules:
+    """Tensor/expert parallel; params replicated over data."""
+    return ShardingRules(
+        mesh=mesh,
+        logical_to_mesh={
+            "batch": _batch_axes(mesh),
+            "seq": None,
+            "embed": None,
+            "vocab": "model",
+            "heads": "model",
+            "kv_heads": "model",
+            "head_dim": None,
+            "mlp": "model",
+            "experts": "model",
+            "expert_mlp": None,
+            "mamba_inner": "model",
+            "mamba_heads": "model",
+            "groups": None,
+            "state": None,
+            "conv_k": None,
+            "conv_dim": "model",
+            "layers": None,
+            "cache_seq": None,
+            "frames": None,
+        },
+    )
+
+
+def fsdp_rules(mesh: Mesh) -> ShardingRules:
+    """tp_rules + ZeRO-3 sharding of the embed dim over data
+    (weights gathered on use, grads reduce-scattered)."""
+    base = tp_rules(mesh)
+    over = dict(base.logical_to_mesh)
+    over["embed"] = "data"
+    over["expert_mlp"] = None  # E over model, D over data is enough
+    return ShardingRules(mesh=mesh, logical_to_mesh=over)
+
+
+def fsdp_pure_rules(mesh: Mesh) -> ShardingRules:
+    """Full ZeRO-3, no tensor parallelism: batch over EVERY mesh axis
+    (per-device batch = B/chips), weights 2D-sharded (embed x mlp/heads).
+    Per-layer traffic = weight all-gathers (param bytes), not activation
+    all-reduces — the right trade for models whose activations/chip exceed
+    their per-layer weights (small-d_model archs at big batch)."""
+    base = tp_rules(mesh)
+    over = dict(base.logical_to_mesh)
+    over["batch"] = ("pod", "data", "model") if "pod" in mesh.shape else ("data", "model")
+    over["embed"] = "data"
+    return ShardingRules(mesh=mesh, logical_to_mesh=over)
+
+
+def tp2d_rules(mesh: Mesh) -> ShardingRules:
+    """Stationary-expert 2D sharding for trillion-scale MoE: expert weights
+    sharded (experts -> model) x (expert_mlp/F -> data) and NEVER gathered —
+    the F-contraction lowers to an activation psum instead of weight
+    all-gathers (gather-per-microbatch is what made FSDP kimi-k2 move
+    7 TB/device/step). Non-expert params: plain TP over model."""
+    base = tp_rules(mesh)
+    over = dict(base.logical_to_mesh)
+    over["expert_mlp"] = ("pod", "data") if "pod" in mesh.shape else "data"
+    return ShardingRules(mesh=mesh, logical_to_mesh=over)
+
+
+def pp_rules(mesh: Mesh) -> ShardingRules:
+    """Pipeline parallelism: layer stacks sharded over `data` (= the stage
+    axis), TP/EP over `model` within each stage, DP over `pod` when present.
+    Weights are STATIONARY (no gathers, grads local to the stage); only
+    microbatch activations move between stages (launch/pipeline.py)."""
+    base = tp_rules(mesh)
+    over = dict(base.logical_to_mesh)
+    over["layers"] = "data"
+    over["stage"] = "data"
+    over["batch"] = "pod" if "pod" in mesh.shape else None
+    # in-flight (stage boundary) activations ride seq-sharded over `model`:
+    # 16x smaller pipeline carries + permutes, Megatron-SP style
+    over["pp_seq"] = "model"
+    # pipe-exit loss: batch spreads back over the whole mesh ("batch" itself
+    # maps to pod-only under pp — leaving the exit hidden replicated would
+    # gather 30 GB/device and replicate the loss compute)
+    over["loss_batch"] = ("pod", "data") if "pod" in mesh.shape else "data"
+    return ShardingRules(mesh=mesh, logical_to_mesh=over)
+
+
+MODES = {
+    "tp": tp_rules,
+    "fsdp": fsdp_rules,
+    "fsdp_pure": fsdp_pure_rules,
+    "tp2d": tp2d_rules,
+    "pp": pp_rules,
+}
+
+
+def rules_for(mesh: Mesh, mode) -> ShardingRules:
+    if isinstance(mode, bool):  # legacy: fsdp flag
+        mode = "fsdp" if mode else "tp"
+    return MODES[mode](mesh)

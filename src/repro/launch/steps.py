@@ -1,0 +1,223 @@
+"""Step-function builders: training (with microbatch gradient accumulation),
+prefill, and decode — plus their in/out shardings for a mesh.
+
+These are the functions the dry-run lowers and the trainers execute; the
+models themselves never see the mesh (logical axes only).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.data import pipeline
+from repro.launch import sharding as shlib
+from repro.models import registry
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init_state(key, cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    params, _ = registry.bundle(cfg).init(key)
+    opt = adamw.init_opt_state(params, opt_cfg)
+    return {"params": params, "opt": opt, "step": jnp.zeros((), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, opt_cfg: adamw.OptConfig):
+    """ShapeDtypeStructs for the full train state (no allocation)."""
+    p_shapes, _ = registry.param_specs(cfg)
+    opt_shapes = jax.eval_shape(lambda: adamw.init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_shapes), opt_cfg
+    ))
+    return {
+        "params": p_shapes,
+        "opt": opt_shapes,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_shardings(cfg: ModelConfig, opt_cfg: adamw.OptConfig,
+                    rules: shlib.ShardingRules):
+    p_shapes, p_specs = registry.param_specs(cfg)
+    p_sh = shlib.param_shardings(rules, p_specs, p_shapes)
+
+    # moments shard like their params; QTensor scales like the param minus
+    # the last axis; counts replicated.
+    def moment_sharding(psh: NamedSharding, pshape, stored):
+        if isinstance(stored, adamw.QTensor):
+            # scale = param.shape[:-1] + (1,): inherit all but the last axis
+            ndim = len(stored.scale.shape)
+            spec = list(psh.spec)[: ndim - 1]
+            spec += [None] * (ndim - len(spec))
+            return adamw.QTensor(
+                q=psh, scale=NamedSharding(rules.mesh, P(*spec))
+            )
+        return psh
+
+    opt_shapes = jax.eval_shape(lambda: adamw.init_opt_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p_shapes), opt_cfg
+    ))
+    is_q = lambda x: isinstance(x, adamw.QTensor)
+
+    def map_moments(msh_tree):
+        flat_p, treedef = jax.tree.flatten(p_sh, is_leaf=lambda x: isinstance(x, NamedSharding))
+        flat_ps, _ = jax.tree.flatten(p_shapes)
+        flat_m = jax.tree.flatten(msh_tree, is_leaf=is_q)[0]
+        out = [moment_sharding(s, ps, m) for s, ps, m in zip(flat_p, flat_ps, flat_m)]
+        return jax.tree.unflatten(treedef, out)
+
+    mu_sh = map_moments(opt_shapes["mu"])
+    nu_sh = map_moments(opt_shapes["nu"])
+    return {
+        "params": p_sh,
+        "opt": {
+            "mu": mu_sh,
+            "nu": nu_sh,
+            "count": NamedSharding(rules.mesh, P()),
+        },
+        "step": NamedSharding(rules.mesh, P()),
+    }
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    rules: shlib.ShardingRules) -> Dict[str, NamedSharding]:
+    specs = registry.input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        logical = ("batch",) + (None,) * (len(s.shape) - 1)
+        out[name] = rules.sharding_for(logical, s.shape)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig,
+                    rules: shlib.ShardingRules):
+    b = registry.bundle(cfg)
+    cache_shapes = registry.cache_specs(cfg, shape)
+    logical = b.cache_logical_specs()
+
+    def map_one(l, c):
+        return rules.sharding_for(l, c.shape)
+
+    is_spec = lambda s: isinstance(s, tuple) and all(
+        isinstance(x, (str, type(None))) for x in s
+    )
+    return jax.tree.map(map_one, logical, cache_shapes, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def build_train_step(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    rules: Optional[shlib.ShardingRules],
+) -> Callable:
+    """Global-batch pjit train step with microbatch gradient accumulation.
+
+    The fp32 grad accumulator is EXPLICITLY constrained to the param
+    shardings — left unconstrained, GSPMD materializes a replicated
+    accumulator and emits a full-size all-reduce per microbatch (measured:
+    +2.7 TB/device/step on kimi-k2; see EXPERIMENTS.md §Perf iteration 2).
+    """
+    b = registry.bundle(cfg)
+    micro = max(cfg.micro_steps, 1)
+    grad_shardings = None
+    if rules is not None:
+        p_shapes, p_specs = registry.param_specs(cfg)
+        grad_shardings = shlib.param_shardings(rules, p_specs, p_shapes)
+
+    def train_step(state, batch):
+        with shlib.use_rules(rules):
+            params = state["params"]
+
+            def loss_of(p, mb):
+                loss, metrics = b.loss_fn(p, mb)
+                return loss, metrics
+
+            if micro == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True
+                )(params, batch)
+            else:
+                def split(x):
+                    Bg = x.shape[0]
+                    return x.reshape((micro, Bg // micro) + x.shape[1:])
+
+                mbatches = jax.tree.map(split, batch)
+
+                def constrain(g):
+                    if grad_shardings is None:
+                        return g
+                    return jax.tree.map(
+                        lambda x, sh: jax.lax.with_sharding_constraint(x, sh),
+                        g, grad_shardings,
+                    )
+
+                def acc_body(carry, mb):
+                    g_acc, l_acc = carry
+                    (l, m), g = jax.value_and_grad(loss_of, has_aux=True)(
+                        params, mb
+                    )
+                    g_acc = constrain(jax.tree.map(
+                        lambda a, x: a + x.astype(jnp.float32), g_acc, g
+                    ))
+                    return (g_acc, l_acc + l), m
+
+                g0 = constrain(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                ))
+                (grads, loss_sum), metrics = jax.lax.scan(
+                    acc_body, (g0, jnp.zeros((), jnp.float32)), mbatches
+                )
+                grads = jax.tree.map(lambda g: g / micro, grads)
+                loss = loss_sum / micro
+                metrics = jax.tree.map(lambda m: m.mean(), metrics)
+
+            new_params, new_opt, opt_metrics = adamw.apply_updates(
+                params, grads, state["opt"], opt_cfg
+            )
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+            metrics = {"loss": loss, **metrics, **opt_metrics}
+            return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: Optional[shlib.ShardingRules]) -> Callable:
+    b = registry.bundle(cfg)
+
+    def prefill_step(params, batch):
+        with shlib.use_rules(rules):
+            return b.prefill_fn(params, batch, shape.seq_len)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig,
+                      rules: Optional[shlib.ShardingRules]) -> Callable:
+    b = registry.bundle(cfg)
+
+    def serve_step(params, cache, batch):
+        with shlib.use_rules(rules):
+            return b.decode_fn(params, cache, batch)
+
+    return serve_step

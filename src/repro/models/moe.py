@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (GShard-style
+groups, Switch-style capacity), expert-parallel over the mesh ``model`` axis.
+
+Memory-lean dispatch: instead of the (T, E, C) one-hot dispatch tensor we
+``argsort`` token->expert assignments and build an (E*C,) gather table of
+token indices — O(T·K) integer work, no giant boolean masks. Tokens beyond
+an expert's capacity are dropped (their combine weight is zero), standard
+for capacity-factor routing.
+
+Grouping: tokens are routed within groups (= batch rows), so the gather
+stays local to the data shard; the (G, E, C, D) dispatched tensor is then
+resharded expert->model, which lowers to the canonical MoE all-to-all.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import activation, dtype_of, truncated_normal
+from repro.launch.sharding import shard_activation
+
+
+def init_moe(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    std_in, std_out = D ** -0.5, F ** -0.5
+    p = {
+        "router": truncated_normal(k1, (D, E), std_in, jnp.float32),
+        "wi": truncated_normal(k2, (E, D, F), std_in, dt),
+        "wg": truncated_normal(k3, (E, D, F), std_in, dt),
+        "wo": truncated_normal(k4, (E, F, D), std_out, dt),
+    }
+    s = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", "expert_mlp"),
+        "wg": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+    return p, s
+
+
+def capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.n_experts)
+    # pad to 8 for clean MXU tiling only when the capacity is already large;
+    # decode groups (1 token) must NOT inflate E*C slots 8x (useful-flops!)
+    if c >= 8:
+        return 8 * math.ceil(c / 8)
+    return max(c, 1)
+
+
+def moe_apply(
+    p: Dict, x: jax.Array, cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, D) -> (out (B, S, D), aux losses).
+
+    Groups = batch rows (B); routing, capacity, and the gather/scatter are
+    all per-group (local to the data shard).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    orig_shape = None
+    if S == 1 and B > 1:
+        # decode regrouping: per-row groups would allocate E*C slots PER ROW
+        # (128x wasted expert FLOPs at B=128, E=128); one global group keeps
+        # slots ~= tokens * top_k * cf. The token gather crosses data shards
+        # but moves only (B, D) bytes — negligible at decode.
+        orig_shape = (B, S, D)
+        x = x.reshape(1, B, D)
+        B, S = 1, B
+    E, K = m.n_experts, m.top_k
+    C = capacity(S, cfg)
+    cdt = x.dtype
+
+    # ---- routing (fp32)
+    logits = jnp.einsum(
+        "gsd,de->gse", x.astype(jnp.float32), p["router"]
+    )                                                   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)              # (B,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch/GShard load balance + router z-loss)
+    me = probs.mean(axis=(0, 1))                        # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        jnp.ones((B * S * K,), jnp.float32)
+    ) / (B * S * K)
+    aux = E * jnp.sum(me * ce) * m.aux_loss
+    zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2) * m.router_z_loss
+
+    # ---- sort-based dispatch, per group
+    TK = S * K
+    expert_flat = top_e.reshape(B, TK)                  # (B, TK)
+    w_flat = top_w.reshape(B, TK)
+    token_idx = jnp.broadcast_to(
+        jnp.arange(S)[:, None], (S, K)
+    ).reshape(TK)                                       # (TK,)
+    order = jnp.argsort(expert_flat, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(expert_flat, order, axis=-1)
+    sorted_t = token_idx[order]                         # (B, TK)
+    sorted_w = jnp.take_along_axis(w_flat, order, axis=-1)
+    counts = jax.nn.one_hot(sorted_e, E, dtype=jnp.int32).sum(axis=1)  # (B,E)
+    offsets = jnp.cumsum(counts, axis=-1) - counts      # (B,E) exclusive
+    rank = jnp.arange(TK)[None, :] - jnp.take_along_axis(offsets, sorted_e, -1)
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)  # overflow -> sentinel
+
+    # gather table (B, E*C+1): token index per expert slot, sentinel = S
+    table = jnp.full((B, E * C + 1), S, dtype=jnp.int32)
+    table = jax.vmap(lambda t, s, tok: t.at[s].set(tok))(table, slot, sorted_t)
+    table = table[:, : E * C]
+    wtab = jnp.zeros((B, E * C + 1), dtype=jnp.float32)
+    wtab = jax.vmap(lambda t, s, w: t.at[s].set(w))(wtab, slot, sorted_w)
+    wtab = wtab[:, : E * C]
+
+    # ---- dispatch: (B, E, C, D), expert-sharded
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), cdt)], axis=1)  # sentinel row
+    xg = jnp.take_along_axis(
+        x_pad, table[:, :, None], axis=1
+    ).reshape(B, E, C, D)
+    xg = shard_activation(xg, ("batch", "experts", None, None))
+
+    # ---- expert FFN (E-parallel einsums). The hidden constraint makes the
+    # tp2d mode explicit: with expert_mlp -> data, h stays F-sharded, the
+    # expert weights stay stationary, and the down-proj contraction lowers
+    # to an activation psum (no weight all-gathers). Under tp/fsdp modes the
+    # constraint maps to replicated-F: a no-op.
+    gate = activation(
+        jnp.einsum("becd,edf->becf", xg, p["wg"].astype(cdt)), cfg.act
+    )
+    up = jnp.einsum("becd,edf->becf", xg, p["wi"].astype(cdt))
+    h = shard_activation(gate * up, ("batch", "experts", None, "expert_mlp"))
+    y = jnp.einsum("becf,efd->becd", h, p["wo"].astype(cdt))
+    y = shard_activation(y, ("batch", "experts", None, None))
+
+    # ---- combine: weighted scatter-add back to token order
+    y_flat = y.reshape(B, E * C, D) * wtab[:, :, None].astype(cdt)
+    out = jnp.zeros((B, S + 1, D), cdt)
+    out = jax.vmap(lambda o, t, v: o.at[t].add(v))(out, table, y_flat)
+    out = out[:, :S]
+    if orig_shape is not None:
+        out = out.reshape(orig_shape)
+    out = shard_activation(out, ("batch", None, None))
+    return out, {"moe_aux": aux, "moe_zloss": zl}

@@ -1,0 +1,141 @@
+"""AdamW in pure JAX: cosine/warmup schedule, global-norm clipping, and
+quantized (int8) moment storage for HBM-critical models (kimi-k2).
+
+Moment quantization is row-wise symmetric int8 (one fp32 scale per
+trailing-axis row — the 8-bit-Adam recipe adapted to keep the tensor's
+sharding: scales drop only the last axis, so the moment tensors shard
+exactly like their parameters).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    dtype: str = "float32"       # float32 | bfloat16 | int8
+
+
+def schedule(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    warm = cfg.peak_lr * (step + 1) / max(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.peak_lr * (
+        cfg.end_lr_frac + (1 - cfg.end_lr_frac) * 0.5 * (1 + jnp.cos(math.pi * t))
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cos).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantized moment storage
+# ---------------------------------------------------------------------------
+
+class QTensor(NamedTuple):
+    q: jax.Array        # int8, same shape as the param
+    scale: jax.Array    # fp32, param.shape[:-1] + (1,)
+
+
+def _quantize(x: jax.Array) -> QTensor:
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def _dequantize(t: QTensor) -> jax.Array:
+    return t.q.astype(jnp.float32) * t.scale
+
+
+def _store(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        return _quantize(x)
+    return x.astype(jnp.bfloat16 if dtype == "bfloat16" else jnp.float32)
+
+
+def _load(x) -> jax.Array:
+    if isinstance(x, QTensor):
+        return _dequantize(x)
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# state / update
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params: Any, cfg: OptConfig) -> Dict[str, Any]:
+    def zeros_like_store(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        return _store(z, cfg.dtype)
+
+    return {
+        "mu": jax.tree.map(zeros_like_store, params),
+        "nu": jax.tree.map(zeros_like_store, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree)
+        )
+    )
+
+
+def apply_updates(
+    params: Any,
+    grads: Any,
+    state: Dict[str, Any],
+    cfg: OptConfig,
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = state["count"] + 1
+    lr = schedule(state["count"], cfg)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    is_q = lambda x: isinstance(x, QTensor)
+
+    def update_leaf(p, g, mu_s, nu_s):
+        g = g.astype(jnp.float32) * clip
+        mu = cfg.b1 * _load(mu_s) + (1 - cfg.b1) * g
+        nu = cfg.b2 * _load(nu_s) + (1 - cfg.b2) * jnp.square(g)
+        mu_hat = mu / (1 - cfg.b1 ** count)
+        nu_hat = nu / (1 - cfg.b2 ** count)
+        upd = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if jnp.issubdtype(p.dtype, jnp.floating):
+            new_p = (
+                p.astype(jnp.float32) - lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+            ).astype(p.dtype)
+        else:  # non-float leaves pass through
+            new_p = p
+        return new_p, _store(mu, cfg.dtype), _store(nu, cfg.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.flatten(state["mu"], is_leaf=is_q)[0]
+    flat_nu = jax.tree.flatten(state["nu"], is_leaf=is_q)[0]
+    out = [update_leaf(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, metrics

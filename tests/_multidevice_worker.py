@@ -1,0 +1,320 @@
+"""Multi-device worker: runs the sim<->collective equivalence checks on 8
+forced host devices. Launched as a subprocess by test_tdm_equivalence.py so
+the main pytest process keeps its single default device.
+
+Exit code 0 + final line "ALL-OK" on success.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import functools
+import random
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import compress as compress_lib
+from repro.core import fl, tdm
+from repro.core.gossip import metropolis_weights, schedule_mixing_matrix
+from repro.core.ptbfla_sim import run_schedule_getmeas
+from repro.core.relation import Relation
+from repro.core.schedule import (
+    TDMSchedule,
+    clique_multilink,
+    hypercube_schedule,
+    round_robin_tournament,
+)
+
+N = 8
+mesh = Mesh(np.array(jax.devices()[:N]), ("node",))
+
+
+def random_relation(rng: random.Random, n: int = N, p: float = 0.5) -> Relation:
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n) if rng.random() < p]
+    return Relation.from_edges(edges, nodes=range(n))
+
+
+def shmap(fn, in_specs, out_specs):
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def check(name, cond):
+    if not cond:
+        print(f"FAIL: {name}")
+        sys.exit(1)
+    print(f"ok: {name}")
+
+
+# ---------------------------------------------------------------------------
+# 1. collective get_meas == paper Algorithm 1 oracle (random relations)
+# ---------------------------------------------------------------------------
+def test_getmeas_equivalence():
+    rng = random.Random(0)
+    for case in range(25):
+        rel = random_relation(rng)
+        x = np.arange(N, dtype=np.float32) * 10 + 1  # node i holds 10i+1
+
+        f = shmap(
+            functools.partial(tdm.get_meas, rel=rel, axis_name="node", n=N),
+            in_specs=P("node"),
+            out_specs=(P("node"), P("node")),
+        )
+        peer_data, mask = jax.jit(f)(x)
+        peer_data = np.asarray(peer_data).reshape(N, -1)
+        mask = np.asarray(mask).reshape(N, -1)
+
+        # oracle: paper-faithful simulator on the same relation
+        sched = TDMSchedule((rel,))
+        received, _ = run_schedule_getmeas(
+            sched, {i: float(x[i]) for i in range(N)}, N, seed=case
+        )
+        for i in range(N):
+            peers = rel.peers_of(i)
+            got = [float(v) for v, m in zip(peer_data[i], mask[i]) if m]
+            want = [received[i][0][p] for p in peers] if peers else []
+            assert got == want, (case, i, got, want)
+    check("collective get_meas == Algorithm 1 oracle (25 random relations)", True)
+
+
+# ---------------------------------------------------------------------------
+# 2. get1_meas == get_meas results (serialized vs multilink; same algebra)
+# ---------------------------------------------------------------------------
+def test_get1meas_equivalence():
+    rng = random.Random(1)
+    for case in range(10):
+        rel = random_relation(rng)
+        x = np.linspace(-1, 1, N).astype(np.float32)
+        f_multi = shmap(
+            functools.partial(tdm.get_meas, rel=rel, axis_name="node", n=N),
+            in_specs=P("node"),
+            out_specs=(P("node"), P("node")),
+        )
+        f_serial = shmap(
+            functools.partial(tdm.get1_meas, rel=rel, axis_name="node", n=N),
+            in_specs=P("node"),
+            out_specs=(P("node"), P("node")),
+        )
+        a, ma = jax.jit(f_multi)(x)
+        b, mb = jax.jit(f_serial)(x)
+        assert np.array_equal(np.asarray(ma), np.asarray(mb))
+        assert np.allclose(np.asarray(a), np.asarray(b)), case
+    check("get1_meas (serialized) == get_meas (multilink) payloads", True)
+
+
+# ---------------------------------------------------------------------------
+# 3. gossip_avg == numpy W @ x (Metropolis weights)
+# ---------------------------------------------------------------------------
+def test_gossip_matches_mixing_matrix():
+    rng = random.Random(2)
+    for case in range(15):
+        rel = random_relation(rng)
+        x = np.random.default_rng(case).normal(size=(N, 4)).astype(np.float32)
+        f = shmap(
+            functools.partial(tdm.gossip_avg, rel=rel, axis_name="node", n=N),
+            in_specs=P("node"),
+            out_specs=P("node"),
+        )
+        got = np.asarray(jax.jit(f)(x)).reshape(N, 4)
+        W = metropolis_weights(rel, N)
+        want = W @ x.reshape(N, 4)
+        assert np.allclose(got, want, atol=1e-5), case
+    check("gossip_avg == W @ x for Metropolis W (15 random relations)", True)
+
+
+# ---------------------------------------------------------------------------
+# 4. schedule gossip == product of mixing matrices (paper P2, quantitative)
+# ---------------------------------------------------------------------------
+def test_schedule_gossip_composition():
+    rng = random.Random(3)
+    rels = tuple(random_relation(rng) for _ in range(3))
+    sched = TDMSchedule(rels)
+    x = np.random.default_rng(7).normal(size=(N, 3)).astype(np.float32)
+    f = shmap(
+        functools.partial(
+            tdm.run_gossip_schedule, schedule=sched, axis_name="node", n=N
+        ),
+        in_specs=P("node"),
+        out_specs=P("node"),
+    )
+    got = np.asarray(jax.jit(f)(x)).reshape(N, 3)
+    W = schedule_mixing_matrix(sched, N)
+    assert np.allclose(got, W @ x.reshape(N, 3), atol=1e-5)
+    check("schedule gossip == product of per-slot mixing matrices", True)
+
+
+# ---------------------------------------------------------------------------
+# 5. hypercube schedule reaches exact consensus in log2(N) slots
+# ---------------------------------------------------------------------------
+def test_hypercube_consensus():
+    sched = hypercube_schedule(N)
+    x = np.random.default_rng(9).normal(size=(N,)).astype(np.float32)
+
+    def body(v):
+        for rel in sched:
+            # pairwise average with hypercube partner: Metropolis on a
+            # perfect matching is exactly 0.5/0.5
+            v = tdm.gossip_avg(v, rel, "node", N)
+        return v
+
+    f = shmap(body, in_specs=P("node"), out_specs=P("node"))
+    got = np.asarray(jax.jit(f)(x))
+    assert np.allclose(got, x.mean(), atol=1e-5)
+    check("hypercube TDM schedule -> exact consensus in log2(N) slots", True)
+
+
+# ---------------------------------------------------------------------------
+# 6. FL rounds: centralized == decentralized-clique (uniform avg)
+# ---------------------------------------------------------------------------
+def test_fl_round_equivalence():
+    x = np.random.default_rng(11).normal(size=(N, 5)).astype(np.float32)
+    f_cent = shmap(
+        functools.partial(fl.centralized_round, axis_name="node"),
+        in_specs=P("node"),
+        out_specs=P("node"),
+    )
+    f_dec = shmap(
+        functools.partial(fl.decentralized_round, axis_name="node", n=N),
+        in_specs=P("node"),
+        out_specs=P("node"),
+    )
+    a = np.asarray(jax.jit(f_cent)(x))
+    b = np.asarray(jax.jit(f_dec)(x))
+    assert np.allclose(a, b, atol=1e-5)
+    assert np.allclose(a.reshape(N, 5), np.broadcast_to(x.reshape(N, 5).mean(0), (N, 5)), atol=1e-5)
+    check("centralized FLA round == decentralized clique round == mean", True)
+
+
+# ---------------------------------------------------------------------------
+# 7. compressed exchange error bounds
+# ---------------------------------------------------------------------------
+def test_int8_exchange_error():
+    rng = random.Random(4)
+    rel = random_relation(rng, p=0.7)
+    x = np.random.default_rng(13).normal(size=(N, 64)).astype(np.float32)
+    f_ref = shmap(
+        functools.partial(tdm.neighbor_sum, rel=rel, axis_name="node"),
+        in_specs=P("node"),
+        out_specs=P("node"),
+    )
+    f_q = shmap(
+        functools.partial(tdm.neighbor_sum_int8, rel=rel, axis_name="node"),
+        in_specs=P("node"),
+        out_specs=P("node"),
+    )
+    ref = np.asarray(jax.jit(f_ref)(x))
+    got = np.asarray(jax.jit(f_q)(x))
+    rel_err = np.linalg.norm(got - ref) / max(np.linalg.norm(ref), 1e-9)
+    assert rel_err < 0.02, rel_err
+    check(f"int8-compressed neighbor_sum rel-err {rel_err:.4f} < 2%", True)
+
+
+def test_topk_choco_converges():
+    """CHOCO-Gossip with top-k compression: consensus under compressed
+    absolute-value exchange (each round ships k=8 of 32 entries)."""
+    rng = random.Random(5)
+    rel = random_relation(rng, p=0.9)
+    cfg = fl.TDMFLAConfig(compression="topk", topk_k=8, choco_gamma=0.4)
+    x0 = np.random.default_rng(17).normal(size=(N, 32)).astype(np.float32)
+
+    def rounds(x):
+        res = None
+        for _ in range(80):
+            x, res = fl.tdm_mix(x, rel, "node", N, cfg, res)
+        return x
+
+    f = shmap(rounds, in_specs=P("node"), out_specs=P("node"))
+    got = np.asarray(jax.jit(f)(x0)).reshape(N, 32)
+    target = x0.reshape(N, 32).mean(0)
+    err = np.linalg.norm(got - target) / np.linalg.norm(target)
+    assert err < 0.05, err
+    check(f"top-k CHOCO-Gossip TDM-FLA consensus err {err:.4f} < 5%", True)
+
+
+def test_topk_error_feedback_on_deltas():
+    """EF-top-k on additive deltas: summing compressed gradient-like deltas
+    over many rounds recovers the uncompressed accumulation."""
+    rng = random.Random(6)
+    rel = random_relation(rng, p=0.8)
+    g = np.random.default_rng(19).normal(size=(N, 32)).astype(np.float32)
+
+    def rounds(grad):
+        res = jnp.zeros_like(grad)
+        acc = jnp.zeros_like(grad)
+        for _ in range(40):
+            summed, res = tdm.neighbor_sum_topk(grad, res, rel, "node", 8)
+            acc = acc + summed
+        return acc
+
+    f = shmap(rounds, in_specs=P("node"), out_specs=P("node"))
+    acc = np.asarray(jax.jit(f)(g)).reshape(N, 32)
+    A = rel.adjacency(N).astype(np.float32)
+    want = 40 * (A @ g.reshape(N, 32))
+    err = np.linalg.norm(acc - want) / np.linalg.norm(want)
+    assert err < 0.05, err
+    check(f"EF top-k delta accumulation err {err:.4f} < 5%", True)
+
+
+# ---------------------------------------------------------------------------
+# 8. TDM-FLA on a Walker constellation converges to consensus
+# ---------------------------------------------------------------------------
+def test_walker_tdm_fla():
+    from repro.core.schedule import WalkerConstellation
+
+    c = WalkerConstellation(total=N, planes=2)
+    sched = c.schedule(10)
+    x0 = np.random.default_rng(23).normal(size=(N, 6)).astype(np.float32)
+
+    def run(x):
+        for rel in sched:
+            x, _ = fl.tdm_mix(x, rel, "node", N)
+        return x
+
+    f = shmap(run, in_specs=P("node"), out_specs=P("node"))
+    got = np.asarray(jax.jit(f)(x0)).reshape(N, 6)
+    err = fl.consensus_error(list(got))
+    assert err < 0.05, err
+    check(f"Walker-constellation TDM-FLA consensus err {err:.4f} < 5%", True)
+
+
+# ---------------------------------------------------------------------------
+# 9. hierarchical (pod x data) gossip on a 2x4 mesh
+# ---------------------------------------------------------------------------
+def test_hierarchical_gossip():
+    mesh2 = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("pod", "data"))
+    intra = Relation.clique(list(range(4)))
+    inter = Relation.clique(list(range(2)))
+    x = np.random.default_rng(29).normal(size=(8, 3)).astype(np.float32)
+
+    def body(v):
+        return tdm.hierarchical_gossip(
+            v, intra, inter, data_axis="data", pod_axis="pod", n_data=4, n_pods=2
+        )
+
+    f = shard_map(body, mesh=mesh2, in_specs=P(("pod", "data")), out_specs=P(("pod", "data")))
+    got = np.asarray(jax.jit(f)(x)).reshape(8, 3)
+    assert np.allclose(got, x.reshape(8, 3).mean(0), atol=1e-5)
+    check("hierarchical pod x data gossip == global mean", True)
+
+
+if __name__ == "__main__":
+    test_getmeas_equivalence()
+    test_get1meas_equivalence()
+    test_gossip_matches_mixing_matrix()
+    test_schedule_gossip_composition()
+    test_hypercube_consensus()
+    test_fl_round_equivalence()
+    test_int8_exchange_error()
+    test_topk_choco_converges()
+    test_topk_error_feedback_on_deltas()
+    test_walker_tdm_fla()
+    test_hierarchical_gossip()
+    print("ALL-OK")

@@ -1,0 +1,124 @@
+"""Minimal hypothesis-style property-testing shim.
+
+The container has no ``hypothesis`` wheel (offline), so this module provides
+the small subset we need: ``@given`` over seeded random *strategies*, running
+each property for N cases with shrink-free but reproducible failure reports
+(the failing case's seed + drawn values are printed).
+
+Usage::
+
+    @given(st_relation(max_nodes=12), st_int(1, 5), cases=200)
+    def test_prop(rel, k):
+        ...
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from typing import Any, Callable, List, Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_CASES = 100
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any], name: str = "st"):
+        self._draw = draw
+        self.name = name
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)), f"{self.name}.map")
+
+
+def st_int(lo: int, hi: int) -> Strategy:
+    return Strategy(lambda rng: rng.randint(lo, hi), f"int[{lo},{hi}]")
+
+
+def st_float(lo: float, hi: float) -> Strategy:
+    return Strategy(lambda rng: rng.uniform(lo, hi), f"float[{lo},{hi}]")
+
+
+def st_bool() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, "bool")
+
+
+def st_choice(options: Sequence[Any]) -> Strategy:
+    opts = list(options)
+    return Strategy(lambda rng: opts[rng.randrange(len(opts))], "choice")
+
+
+def st_array(shape_st: Strategy, lo: float = -2.0, hi: float = 2.0) -> Strategy:
+    def draw(rng: random.Random) -> np.ndarray:
+        shape = shape_st.draw(rng)
+        np_rng = np.random.default_rng(rng.randrange(2**31))
+        return np_rng.uniform(lo, hi, size=shape).astype(np.float32)
+
+    return Strategy(draw, "array")
+
+
+def st_shape(max_rank: int = 2, max_dim: int = 16) -> Strategy:
+    def draw(rng: random.Random) -> Tuple[int, ...]:
+        rank = rng.randint(1, max_rank)
+        return tuple(rng.randint(1, max_dim) for _ in range(rank))
+
+    return Strategy(draw, "shape")
+
+
+def st_edges(max_nodes: int = 12, p: float = 0.4) -> Strategy:
+    """Random undirected simple graph edge list on nodes 0..n-1 (n >= 2)."""
+
+    def draw(rng: random.Random) -> Tuple[int, List[Tuple[int, int]]]:
+        n = rng.randint(2, max_nodes)
+        edges = [
+            (i, j)
+            for i in range(n)
+            for j in range(i + 1, n)
+            if rng.random() < p
+        ]
+        return n, edges
+
+    return Strategy(draw, "edges")
+
+
+def st_relation(max_nodes: int = 12, p: float = 0.4) -> Strategy:
+    """Random valid exchange relation (symmetric, anti-reflexive)."""
+    from repro.core.relation import Relation
+
+    def draw(rng: random.Random):
+        n, edges = st_edges(max_nodes, p).draw(rng)
+        return Relation.from_edges(edges, nodes=range(n))
+
+    return Strategy(draw, "relation")
+
+
+def given(*strategies: Strategy, cases: int = DEFAULT_CASES, seed: int = 0):
+    """Run the wrapped property for ``cases`` seeded random draws."""
+
+    def deco(fn):
+        # NOTE: no functools.wraps — pytest would introspect the wrapped
+        # signature and demand fixtures for the strategy parameters.
+        def wrapper(*args, **kwargs):
+            for case in range(cases):
+                rng = random.Random((seed << 20) ^ case)
+                drawn = [s.draw(rng) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception:
+                    print(
+                        f"\nproptest: case {case} FAILED "
+                        f"(seed={(seed << 20) ^ case})\ndrawn values:"
+                    )
+                    for s, v in zip(strategies, drawn):
+                        print(f"  {s.name} = {v!r}")
+                    raise
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,0 +1,134 @@
+"""Tests for the roofline accounting layers: the jaxpr cost walker
+(launch/flops.py) and the trip-count-aware HLO collective parser
+(launch/hlo_stats.py). These are load-bearing for §Roofline — errors here
+would silently skew every reported number."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_stats
+from repro.launch.flops import Costs, jaxpr_costs, program_costs
+
+
+# ------------------------------------------------------------ flops walker
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128))
+    b = jnp.zeros((128, 32))
+    c = program_costs(lambda a, b: a @ b, a, b)
+    assert c.flops == 2 * 64 * 128 * 32
+    # traffic: operands + result + program I/O (same arrays counted again)
+    onepass = (64 * 128 + 128 * 32 + 64 * 32) * 4
+    assert c.traffic_bytes == 2 * onepass
+
+
+def test_batched_dot_flops():
+    a = jnp.zeros((8, 64, 128))
+    b = jnp.zeros((8, 128, 32))
+    c = program_costs(lambda a, b: jnp.einsum("bik,bkj->bij", a, b), a, b)
+    assert c.flops == 8 * 2 * 64 * 128 * 32
+
+
+def test_scan_multiplies_body():
+    w = jnp.zeros((16, 128, 128))
+    x = jnp.zeros((128, 128))
+
+    def f(x, w):
+        return jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)[0]
+
+    c = program_costs(f, x, w)
+    assert c.flops == pytest.approx(16 * 2 * 128**3, rel=1e-6)
+
+
+def test_nested_scan_multiplies():
+    w = jnp.zeros((4, 8, 64, 64))
+    x = jnp.zeros((64, 64))
+
+    def f(x, w):
+        def outer(c, wo):
+            def inner(ci, wi):
+                return ci @ wi, None
+            return jax.lax.scan(inner, c, wo)[0], None
+        return jax.lax.scan(outer, x, w)[0]
+
+    c = program_costs(f, x, w)
+    assert c.flops == pytest.approx(4 * 8 * 2 * 64**3, rel=1e-6)
+
+
+def test_grad_and_remat_counted():
+    w = jnp.zeros((8, 128, 128))
+    x = jnp.zeros((128, 128))
+
+    def mk(remat):
+        def f(x, w):
+            body = lambda c, wi: (jnp.tanh(c @ wi), None)
+            b = jax.checkpoint(body) if remat else body
+            return jnp.sum(jax.lax.scan(b, x, w)[0])
+        return f
+
+    base = program_costs(mk(False), x, w).flops
+    grad = program_costs(jax.grad(mk(False)), x, w).flops
+    rgrad = program_costs(jax.grad(mk(True)), x, w).flops
+    assert grad > base  # bwd adds work
+    assert rgrad > grad  # remat adds recompute on top
+    assert rgrad / base == pytest.approx(3.0, rel=0.05)
+
+
+def test_transcendentals_tracked():
+    x = jnp.zeros((1000,))
+    c = program_costs(lambda x: jnp.exp(x) + jnp.tanh(x), x)
+    assert c.transcendentals == 2000
+
+
+# ---------------------------------------------------------- HLO collectives
+HLO_SAMPLE = """
+HloModule jit_f
+
+%wide.body (param: (s32[], f32[4,128])) -> (s32[], f32[4,128]) {
+  %ag = f32[128,128]{1,0} all-gather(%gte), channel_id=1, dimensions={1}
+  %ar = bf16[4,128]{1,0} all-reduce(%x), channel_id=2
+  ROOT %t = (s32[], f32[4,128]) tuple(%iv, %y)
+}
+
+%wide.cond (param.1: (s32[], f32[4,128])) -> pred[] {
+  %c = s32[] constant(12)
+  %gte0 = s32[] get-tuple-element(%param.1), index=0
+  ROOT %cmp = pred[] compare(%gte0, %c), direction=LT
+}
+
+ENTRY %main (p0: f32[4,128]) -> f32[4,128] {
+  %cp = f32[4,128]{1,0} collective-permute(%p0), channel_id=3
+  %w = (s32[], f32[4,128]) while(%init), condition=%wide.cond, body=%wide.body
+  %rs = f32[2,128]{1,0} reduce-scatter(%q), channel_id=4
+  ROOT %out = f32[4,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_trip_counts():
+    st = hlo_stats.collective_stats(HLO_SAMPLE)
+    # while body: trip 12 -> ag 128*128*4*12, ar 4*128*2*12
+    assert st.bytes_by_kind["all-gather"] == 128 * 128 * 4 * 12
+    assert st.bytes_by_kind["all-reduce"] == 4 * 128 * 2 * 12
+    # entry-level ops once
+    assert st.bytes_by_kind["collective-permute"] == 4 * 128 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 2 * 128 * 4
+    assert st.count_by_kind["all-gather"] == 12
+    assert st.unknown_trip_whiles == 0
+
+
+def test_collective_parser_real_module():
+    """End-to-end: sharded scanned matmul on forced devices is covered by
+    the mini dry-run worker; here just ensure no crash on a module with no
+    collectives."""
+    hlo = jax.jit(lambda x: x * 2).lower(jnp.ones((4,))).compile().as_text()
+    st = hlo_stats.collective_stats(hlo)
+    assert st.total_bytes == 0
+
+
+def test_shape_bytes():
+    assert hlo_stats.shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert hlo_stats.shape_bytes("f32[]") == 4
+    assert hlo_stats.shape_bytes("pred[7]") == 7
+    assert hlo_stats.shape_bytes("token[]") == 0

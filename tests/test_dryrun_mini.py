@@ -1,0 +1,47 @@
+"""Launchers for multi-device integration suites that need forced host
+devices (subprocesses — device count locks at first jax init):
+
+- mini dry-run: lower+compile+roofline on a 2x2 mesh for every family
+- FL constellation example: TDM-FL training with a simulated satellite loss
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(script, timeout=1800):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT / 'tests'}:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True, text=True, env=env, timeout=timeout, cwd=ROOT,
+    )
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    return proc
+
+
+@pytest.mark.slow
+def test_mini_dryrun_all_families():
+    proc = _run(ROOT / "tests" / "_minidryrun_worker.py")
+    assert proc.returncode == 0
+    assert "ALL-OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_fl_constellation_example():
+    proc = _run(ROOT / "examples" / "train_fl_constellation.py")
+    assert proc.returncode == 0
+    out = proc.stdout
+    assert "satellite 3 lost" in out
+    # loss at round 9 < loss at round 0
+    import re
+
+    losses = [float(m) for m in re.findall(r"mean-loss\s+([\d.]+)", out)]
+    assert len(losses) >= 10 and losses[-1] < losses[0] * 0.7

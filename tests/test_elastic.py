@@ -1,0 +1,67 @@
+"""Fault-tolerance unit tests: heartbeat tracking, slot-deadline straggler
+policy, TDM rescheduling, and elastic reshard-on-restore across DIFFERENT
+mesh shapes (the new job's mesh != the mesh that saved)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.core.relation import Relation
+from repro.core.schedule import round_robin_tournament
+from repro.launch.elastic import HealthTracker, SlotDeadline, reschedule
+
+
+def test_health_tracker_deadlines():
+    ht = HealthTracker(n_nodes=4, deadline_s=10.0)
+    now = 100.0
+    for i in range(4):
+        ht.beat(i, t=now - i * 6)   # node i last seen 6i seconds ago
+    assert ht.alive(now) == {0, 1}  # 0s and 6s ago alive; 12s, 18s dead
+    assert ht.dead(now) == {2, 3}
+
+
+def test_slot_deadline_masks_stragglers():
+    pol = SlotDeadline(deadline_steps=2)
+    progress = np.array([10, 9, 7, 4])
+    mask = pol.participate(progress, slot_step=10)
+    # nodes within 2 steps of the slot participate; laggards are odata=None
+    np.testing.assert_array_equal(mask, [True, True, False, False])
+
+
+def test_reschedule_preserves_validity():
+    sched = round_robin_tournament(8)
+    surv = reschedule(sched, alive=[0, 1, 2, 4, 6, 7])
+    for slot in surv:
+        assert slot.is_valid_exchange() or len(slot) == 0
+        assert {3, 5}.isdisjoint(slot.participants())
+    # surviving pairs are preserved
+    for t, slot in enumerate(sched):
+        for (i, j) in slot.pairs:
+            if i in surv[t].nodes and j in surv[t].nodes:
+                assert (i, j) in surv[t]
+
+
+def test_elastic_restore_reshards_for_new_mesh(tmp_path):
+    """Save from a 'job' with one layout, restore placed for another mesh:
+    values must be identical and shardings must match the NEW mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {
+        "w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
+        "b": jnp.ones((4,), jnp.float32),
+    }
+    ckpt_lib.save(tmp_path, 3, tree, async_save=False)
+
+    # "new job": single-device mesh (this container) with explicit shardings
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = {
+        "w": NamedSharding(mesh, P("data", None)),
+        "b": NamedSharding(mesh, P()),
+    }
+    step, out = ckpt_lib.restore(tmp_path, target=tree, shardings=shardings)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding.is_equivalent_to(shardings["w"], ndim=2)

@@ -1,0 +1,155 @@
+"""Tests for the three generic FLAs in simulator (oracle) form, including
+FL convergence: centralized == decentralized == TDM consensus on averaging."""
+
+import numpy as np
+import pytest
+
+from repro.core import fl
+from repro.core.gossip import metropolis_weights, spectral_gap
+from repro.core.relation import Relation
+from repro.core.schedule import (
+    TDMSchedule,
+    WalkerConstellation,
+    clique_multilink,
+    hypercube_schedule,
+    round_robin_tournament,
+)
+from proptest import given, st_int
+
+
+def test_centralized_fla_fedavg():
+    """One round of the generic centralized FLA computes FedAvg."""
+    n = 6
+    client_data = {i: float(i) for i in range(n) if i != 0}
+
+    def client_fn(model, data):
+        return model + data  # local 'training': shift by local data
+
+    def server_fn(model, updates):
+        return float(np.mean(updates))
+
+    out = fl.centralized_fla_sim(
+        n_nodes=n,
+        server_id=0,
+        client_fn=client_fn,
+        server_fn=server_fn,
+        client_data=client_data,
+        server_data=0.0,
+        n_rounds=1,
+    )
+    assert out == pytest.approx(np.mean([float(i) for i in range(1, n)]))
+
+
+def test_centralized_fla_multi_round():
+    n = 4
+    out = fl.centralized_fla_sim(
+        n_nodes=n,
+        server_id=2,
+        client_fn=lambda m, d: 0.5 * m + d,
+        server_fn=lambda m, ups: float(np.mean(ups)),
+        client_data={i: 1.0 for i in range(n) if i != 2},
+        server_data=8.0,
+        n_rounds=20,
+    )
+    # fixed point of m -> 0.5 m + 1
+    assert out == pytest.approx(2.0, abs=1e-4)
+
+
+@given(st_int(3, 9), st_int(0, 500), cases=30)
+def test_decentralized_fla_uniform_average(n, seed):
+    """One clique round with uniform mixing = exact global mean everywhere."""
+    data = {i: float(i * i) for i in range(n)}
+
+    def update(own, peers):
+        return (own + sum(peers)) / n
+
+    results = fl.decentralized_fla_sim(n, update, data, n_rounds=1, seed=seed)
+    want = np.mean(list(data.values()))
+    for i in range(n):
+        assert results[i] == pytest.approx(want)
+
+
+@given(st_int(0, 500), cases=20)
+def test_tdm_fla_consensus_over_walker(seed):
+    """The paper's FLA over a time-varying Walker visibility schedule:
+    Metropolis mixing reaches consensus on the constellation average."""
+    c = WalkerConstellation(total=12, planes=3)
+    sched = c.schedule(60)
+    n = 12
+    init = {i: np.array([float(i), -float(i)]) for i in range(n)}
+
+    Ws = {}
+
+    def mix(own, peers):
+        # mirror of collective Metropolis mixing, done with plain numpy
+        return own  # replaced below per node via closure
+    # use schedule mixing directly: emulate with per-node closure capturing rel
+    # simpler: run with mix via metropolis using node-degree info per slot
+    state = {i: init[i].copy() for i in range(n)}
+    for rel in sched:
+        W = metropolis_weights(rel, n)
+        new = {}
+        for i in range(n):
+            new[i] = W[i, i] * state[i] + sum(
+                W[i, j] * state[j] for j in rel.peers_of(i)
+            )
+        state = new
+    target = np.mean([init[i] for i in range(n)], axis=0)
+    err = max(np.linalg.norm(state[i] - target) for i in range(n))
+    assert err < 1e-3
+
+
+def test_tdm_fla_sim_local_plus_mix():
+    """tdm_fla_sim: local step + getMeas exchange + mix, over a hypercube
+    schedule — exact consensus in log2(n) slots when mixing is pairwise avg."""
+    n = 8
+    sched = hypercube_schedule(n)
+    init = {i: float(i) for i in range(n)}
+
+    def local_fn(node, t, v):
+        return v  # no local drift: test pure mixing
+
+    def mix_fn(own, peers):
+        return (own + peers[0]) / 2.0  # matching => exactly one peer
+
+    results, sim = fl.tdm_fla_sim(sched, n, local_fn, mix_fn, init)
+    want = np.mean(list(init.values()))
+    for i in range(n):
+        assert results[i] == pytest.approx(want)
+    # message economy: hypercube moves n*log2(n) messages
+    assert sim.total_messages == n * (n.bit_length() - 1)
+
+
+def test_tdm_fla_skip_slot_isolated_nodes():
+    """Nodes with no peers in a slot skip it (odata=None) and still finish."""
+    n = 4
+    r_partial = Relation.from_edges([(0, 1)], nodes=range(n))  # 2,3 isolated
+    sched = TDMSchedule((r_partial,))
+    results, _ = fl.tdm_fla_sim(
+        sched,
+        n,
+        local_fn=lambda i, t, v: v,
+        mix_fn=lambda own, peers: (own + sum(peers)) / (1 + len(peers)),
+        init={i: float(i) for i in range(n)},
+    )
+    assert results[0] == pytest.approx(0.5)
+    assert results[1] == pytest.approx(0.5)
+    assert results[2] == 2.0 and results[3] == 3.0  # untouched
+
+
+def test_spectral_gap_orders_topologies():
+    """Clique mixes faster than ring (spectral gap ordering) — the
+    quantitative face of paper P2."""
+    n = 12
+    from repro.core.schedule import ring
+
+    gap_clique = spectral_gap(metropolis_weights(Relation.clique(list(range(n))), n))
+    gap_ring = spectral_gap(metropolis_weights(ring(n), n))
+    assert gap_clique > gap_ring > 0
+
+
+def test_rounds_to_consensus_finite():
+    n = 8
+    W = metropolis_weights(Relation.clique(list(range(n))), n)
+    t = fl.rounds_to_consensus(W, tol=1e-6)
+    assert 0 < t < 100

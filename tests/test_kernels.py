@@ -1,0 +1,242 @@
+"""Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
+ref.py pure-jnp oracles. Kernels run in interpret=True mode (the container
+is CPU; TPU is the compile target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.kernels.ssd_scan import ref as ssd_ref
+from repro.kernels.tdm_compress import ops as q_ops
+from repro.kernels.tdm_compress import ref as q_ref
+from repro.models.attention import AttnSpec, flash_attention_train, naive_attention
+from repro.models import mamba2 as mamba_lib
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel vs oracle
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (B, Sq, Skv, H, KV, hd, causal, window, softcap, dtype)
+    (1, 256, 256, 2, 2, 64, True, None, None, jnp.float32),
+    (2, 256, 256, 4, 2, 64, True, None, None, jnp.float32),      # GQA
+    (1, 384, 384, 4, 1, 64, True, None, None, jnp.float32),      # MQA
+    (1, 256, 256, 2, 2, 64, True, 128, None, jnp.float32),       # window
+    (1, 256, 256, 2, 2, 64, True, None, 50.0, jnp.float32),      # softcap
+    (1, 256, 256, 2, 2, 64, False, None, None, jnp.float32),     # bidi
+    (2, 256, 256, 4, 2, 128, True, 128, 30.0, jnp.float32),      # all
+    (1, 256, 256, 2, 2, 64, True, None, None, jnp.bfloat16),
+    (1, 128, 512, 2, 2, 96, False, None, None, jnp.float32),     # cross, pad hd
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES)
+def test_flash_kernel_matches_ref(case):
+    B, Sq, Skv, H, KV, hd, causal, window, softcap, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = rand(ks[0], (B, Sq, H, hd), dtype)
+    k = rand(ks[1], (B, Skv, KV, hd), dtype)
+    v = rand(ks[2], (B, Skv, KV, hd), dtype)
+    got = fa_ops.flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=128, block_k=128, interpret=True,
+    )
+    want = fa_ref.attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap
+    )
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_model_flash_matches_kernel_and_ref():
+    """Three-way: model XLA path == Pallas kernel == naive oracle."""
+    B, S, H, KV, hd = 2, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = rand(ks[0], (B, S, H, hd), jnp.float32)
+    k = rand(ks[1], (B, S, KV, hd), jnp.float32)
+    v = rand(ks[2], (B, S, KV, hd), jnp.float32)
+    spec = AttnSpec(causal=True, window=128, softcap=50.0, block_q=128, block_k=128)
+    xla = flash_attention_train(q, k, v, spec)
+    kern = fa_ops.flash_attention(
+        q, k, v, causal=True, window=128, softcap=50.0,
+        block_q=128, block_k=128, interpret=True,
+    )
+    ref = fa_ref.attention_ref(q, k, v, causal=True, window=128, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_model_flash_gradients_match_naive():
+    """The manual custom_vjp backward == AD through the naive oracle."""
+    B, S, H, KV, hd = 1, 64, 2, 1, 32
+    spec = AttnSpec(causal=True, window=48, softcap=20.0, block_q=16, block_k=16)
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (B, S, H, hd), jnp.float32)
+    k = rand(ks[1], (B, S, KV, hd), jnp.float32)
+    v = rand(ks[2], (B, S, KV, hd), jnp.float32)
+
+    def loss_flash(q, k, v):
+        return jnp.sum(jnp.sin(flash_attention_train(q, k, v, spec)))
+
+    def loss_naive(q, k, v):
+        return jnp.sum(jnp.sin(naive_attention(q, k, v, spec)))
+
+    g1 = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD kernel vs sequential oracle
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (B, S, H, P, G, N, chunk, dtype)
+    (1, 128, 2, 16, 1, 32, 32, jnp.float32),
+    (2, 256, 4, 64, 2, 64, 64, jnp.float32),
+    (1, 256, 4, 64, 4, 128, 128, jnp.float32),
+    (1, 128, 2, 32, 1, 64, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_matches_sequential_ref(case):
+    B, S, H, P, G, N, chunk, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 5)
+    xh = rand(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=-1.0, maxval=1.0))
+    Bv = rand(ks[3], (B, S, G, N), dtype)
+    Cv = rand(ks[4], (B, S, G, N), dtype)
+
+    y, state = ssd_ops.ssd_scan(xh, dt, A, Bv, Cv, chunk=chunk, interpret=True)
+
+    # oracle in kernel layout
+    r = H // G
+    xf = xh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Af = jnp.broadcast_to(A[None], (B, H)).reshape(B * H)
+    Bh = jnp.broadcast_to(Bv[:, :, :, None, :], (B, S, G, r, N)).transpose(
+        0, 2, 3, 1, 4
+    ).reshape(B * H, S, N)
+    Ch = jnp.broadcast_to(Cv[:, :, :, None, :], (B, S, G, r, N)).transpose(
+        0, 2, 3, 1, 4
+    ).reshape(B * H, S, N)
+    y_ref, state_ref = ssd_ref.ssd_ref(xf, dtf, Af, Bh, Ch)
+    y_ref = y_ref.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    state_ref = state_ref.reshape(B, H, P, N)
+
+    # chunked matmuls vs sequential recurrence sum in different orders;
+    # fp32 noise grows with N (reduction width) — scale-aware tolerances.
+    rtol, atol = (3e-2, 3e-1) if dtype == jnp.bfloat16 else (2e-3, 1e-2)
+    np.testing.assert_allclose(
+        np.asarray(y, np.float32), np.asarray(y_ref, np.float32), rtol=rtol, atol=atol
+    )
+    np.testing.assert_allclose(
+        np.asarray(state, np.float32), np.asarray(state_ref, np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+def test_model_ssd_chunked_matches_ref():
+    """The model's XLA chunked SSD == sequential oracle (independent of the
+    Pallas kernel)."""
+    B, S, H, P, G, N, chunk = 2, 128, 4, 16, 2, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    xh = rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=-1.0, maxval=1.0))
+    Bv = rand(ks[3], (B, S, G, N), jnp.float32)
+    Cv = rand(ks[4], (B, S, G, N), jnp.float32)
+    y, state = mamba_lib.ssd_chunked(xh, dt, A, Bv, Cv, chunk)
+
+    r = H // G
+    xf = xh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Af = jnp.broadcast_to(A[None], (B, H)).reshape(B * H)
+    Bh = jnp.broadcast_to(Bv[:, :, :, None, :], (B, S, G, r, N)).transpose(
+        0, 2, 3, 1, 4
+    ).reshape(B * H, S, N)
+    Ch = jnp.broadcast_to(Cv[:, :, :, None, :], (B, S, G, r, N)).transpose(
+        0, 2, 3, 1, 4
+    ).reshape(B * H, S, N)
+    y_ref, state_ref = ssd_ref.ssd_ref(xf, dtf, Af, Bh, Ch)
+    y_ref = y_ref.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(state), np.asarray(state_ref.reshape(B, H, P, N)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_ssd_decode_step_consistent_with_scan():
+    """mamba_decode_step over S steps == chunked scan on the full sequence."""
+    B, S, H, P, G, N = 1, 16, 2, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    xh = rand(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(rand(ks[1], (B, S, H), jnp.float32))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,), minval=-1.0, maxval=1.0))
+    Bv = rand(ks[3], (B, S, G, N), jnp.float32)
+    Cv = rand(ks[4], (B, S, G, N), jnp.float32)
+    y_scan, state_scan = mamba_lib.ssd_chunked(xh, dt, A, Bv, Cv, chunk=8)
+
+    # manual per-step recurrence
+    state = jnp.zeros((B, H, P, N))
+    r = H // G
+    ys = []
+    for t in range(S):
+        Bh = jnp.broadcast_to(Bv[:, t, :, None, :], (B, G, r, N)).reshape(B, H, N)
+        Ch = jnp.broadcast_to(Cv[:, t, :, None, :], (B, G, r, N)).reshape(B, H, N)
+        decay = jnp.exp(dt[:, t] * A[None])
+        state = decay[:, :, None, None] * state + jnp.einsum(
+            "bhn,bhp,bh->bhpn", Bh, xh[:, t], dt[:, t]
+        )
+        ys.append(jnp.einsum("bhn,bhpn->bhp", Ch, state))
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_scan), np.asarray(state), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# int8 TDM payload kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,block", [(1024, 256), (4096, 1024), (8192, 512)])
+def test_quant_kernel_matches_ref(n, block):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32) * 3.0
+    q, s, _ = q_ops.quantize_payload(x, block=block, interpret=True)
+    q_want, s_want = q_ref.quantize_ref(x, block=block)
+    np.testing.assert_array_equal(np.asarray(q[:n]), np.asarray(q_want))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_want), rtol=1e-6)
+
+    back = q_ops.dequantize_payload(q, s, (n,), block=block, interpret=True)
+    back_ref = q_ref.dequantize_ref(q_want, s_want, block=block)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(back_ref), rtol=1e-6)
+    # quantization error bound: blockwise absmax/127
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.repeat(np.asarray(s_want), block) * 0.5 + 1e-7
+    assert (err <= bound + 1e-6).all()
+
+
+@pytest.mark.parametrize("shape", [(33,), (5, 7), (128, 3, 3)])
+def test_quant_padding_roundtrip(shape):
+    """Non-multiple sizes are padded and exactly un-padded."""
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    q, s, _ = None, None, None
+    qq, ss, shp = q_ops.quantize_payload(x, block=64, interpret=True)
+    back = q_ops.dequantize_payload(qq, ss, tuple(shape), block=64, interpret=True)
+    assert back.shape == tuple(shape)
+    assert np.max(np.abs(np.asarray(back) - np.asarray(x))) < 0.05

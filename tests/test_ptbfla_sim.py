@@ -1,0 +1,177 @@
+"""Tests for the paper-faithful Algorithm 1 simulator (the reproduction
+floor): getMeas semantics, timeSlotsMap reorder buffer, skip-slot, get1meas
+pairwise limitation, and data propagation (paper P2) across schedules."""
+
+import numpy as np
+import pytest
+
+from repro.core.gossip import propagation_closure
+from repro.core.ptbfla_sim import (
+    PTBFLASimulator,
+    run_schedule_get1meas,
+    run_schedule_getmeas,
+)
+from repro.core.relation import Relation
+from repro.core.schedule import (
+    TDMSchedule,
+    clique_multilink,
+    round_robin_tournament,
+)
+from proptest import given, st_int, st_relation
+
+
+# ------------------------------------------------------------ single slot
+@given(st_relation(max_nodes=10, p=0.5), st_int(0, 10_000), cases=120)
+def test_getmeas_delivers_peer_data_in_order(rel, seed):
+    """Every node receives exactly its peers' odata, ordered as peer_ids
+    (paper: 'each element of the list obss corresponds to the element in the
+    same position of the list peer_ids')."""
+    n = (max(rel.nodes) + 1) if rel.nodes else 2
+    sched = TDMSchedule((rel,))
+    data = {i: f"odata-{i}" for i in range(n)}
+    received, sim = run_schedule_getmeas(sched, data, n, seed=seed)
+    for i in range(n):
+        peers = rel.peers_of(i)
+        if not peers:
+            assert received[i] == {}
+        else:
+            assert list(received[i][0].keys()) == peers
+            for p in peers:
+                assert received[i][0][p] == f"odata-{p}"
+
+
+@given(st_int(0, 10_000), cases=40)
+def test_timeslotsmap_buffers_fast_peers(seed):
+    """Multi-slot schedules with adversarial interleaving exercise the
+    reorder buffer: a fast node's slot-(t+1) message arrives while the slow
+    peer is still in slot t and must be buffered, not lost."""
+    n = 4
+    sched = TDMSchedule(tuple(clique_multilink(n)[0] for _ in range(4)))
+    data = {i: (lambda i=i: (lambda t: (i, t)))() for i in range(n)}
+    received, sim = run_schedule_getmeas(sched, data, n, seed=seed)
+    for i in range(n):
+        for t in range(4):
+            for p in [j for j in range(n) if j != i]:
+                assert received[i][t][p] == (p, t)  # right slot's data, always
+
+
+def test_timeslotsmap_actually_used():
+    """At least one interleaving buffers at least one out-of-slot message —
+    otherwise the test above proves nothing about timeSlotsMap."""
+    n = 4
+    sched = TDMSchedule(tuple(clique_multilink(n)[0] for _ in range(6)))
+    data = {i: (lambda i=i: (lambda t: (i, t)))() for i in range(n)}
+    buffered = 0
+    for seed in range(25):
+        _, sim = run_schedule_getmeas(sched, data, n, seed=seed)
+        buffered += sum(node.n_buffered for node in sim.nodes)
+    assert buffered > 0
+
+
+def test_skip_slot_odata_none():
+    """Paper assumption (b): a node not taking part sets odata=None, which
+    just advances its slot counter."""
+    sim = PTBFLASimulator(2)
+    node = sim.nodes[0]
+    gen_or_val = sim.get_meas(node, [], None)
+    # skip path returns a plain value (no yields)
+    assert not hasattr(gen_or_val, "send") or _drain(gen_or_val) is None
+    assert node.time_slot == 1
+    assert node.n_sent == 0
+
+
+def _drain(gen):
+    try:
+        while True:
+            gen.send(None)
+    except StopIteration as s:
+        return s.value
+
+
+def test_get1meas_rejects_multilink_slot():
+    """The original primitive's limitation (what the paper removes)."""
+    rel = Relation.from_edges([(0, 1), (1, 2)])  # node 1 has two peers
+    with pytest.raises(ValueError, match="pairwise"):
+        run_schedule_get1meas(TDMSchedule((rel,)), {i: i for i in range(3)}, 3)
+
+
+def test_invalid_schedule_deadlocks_detected():
+    """A one-sided 'exchange' (aRb without bRa) deadlocks; the scheduler
+    detects it rather than hanging."""
+    sim = PTBFLASimulator(2)
+
+    def prog_a(node):
+        res = yield from sim.get_meas(node, [1], "x")  # waits for 1 forever
+        return res
+
+    def prog_b(node):
+        if False:
+            yield
+        return None  # b never sends
+
+    with pytest.raises(RuntimeError, match="deadlock"):
+        sim.run({0: prog_a, 1: prog_b})
+
+
+# --------------------------------------------------------- full schedules
+@given(st_int(2, 9), st_int(0, 1000), cases=60)
+def test_round_robin_equals_multilink_semantics(n, seed):
+    """Paper §IV: the get1meas round-robin tournament and the getMeas
+    single-slot clique are semantically equivalent — after the full schedule
+    every node holds every other node's data."""
+    data = {i: f"d{i}" for i in range(n)}
+    rr, _ = run_schedule_get1meas(round_robin_tournament(n), data, n, seed=seed)
+    ml, _ = run_schedule_getmeas(clique_multilink(n), data, n, seed=seed)
+    for i in range(n):
+        got_rr = {p: v for slot in rr[i].values() for p, v in slot.items()}
+        got_ml = {p: v for slot in ml[i].values() for p, v in slot.items()}
+        assert got_rr == got_ml == {j: f"d{j}" for j in range(n) if j != i}
+
+
+@given(st_relation(max_nodes=8, p=0.4), st_relation(max_nodes=8, p=0.4), st_int(0, 1000), cases=60)
+def test_data_propagation_matches_closure(r1, r2, seed):
+    """Paper P2 realized operationally: run a 2-slot schedule where nodes
+    forward everything they know; the set of node-i-originated data that
+    reached j equals the propagation closure of the slot sequence."""
+    n = max([max(r1.nodes, default=0), max(r2.nodes, default=0)]) + 1
+    sched = TDMSchedule((r1.restrict(range(n)), r2.restrict(range(n))))
+    sim = PTBFLASimulator(n, seed=seed)
+
+    def make_prog(i):
+        def prog(node):
+            know = {i}
+            for rel in sched:
+                peers = rel.peers_of(i)
+                odata = sorted(know) if peers else None
+                got = yield from _as_gen_local(sim.get_meas(node, peers, odata))
+                if got:
+                    for lst in got:
+                        know.update(lst)
+            return know
+
+        return prog
+
+    results = sim.run({i: make_prog(i) for i in range(n)})
+    reach = propagation_closure(sched, n)
+    for j in range(n):
+        expected = {i for i in range(n) if reach[i, j]}
+        assert results[j] == expected
+
+
+def _as_gen_local(gen_or_value):
+    if hasattr(gen_or_value, "send"):
+        result = yield from gen_or_value
+        return result
+    return gen_or_value
+
+
+# ----------------------------------------------------------- message cost
+def test_message_counts_match_theory():
+    """|messages| per slot = |R| (each ordered pair is one send)."""
+    n = 6
+    rel = Relation.clique(list(range(n)))
+    _, sim = run_schedule_getmeas(TDMSchedule((rel,)), {i: i for i in range(n)}, n)
+    assert sim.total_messages == len(rel) == n * (n - 1)
+
+    _, sim2 = run_schedule_get1meas(round_robin_tournament(n), {i: i for i in range(n)}, n)
+    assert sim2.total_messages == n * (n - 1)  # same total, spread over slots

@@ -1,0 +1,166 @@
+"""Property tests for the paper's §II theoretical foundation (P1–P5)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.relation import Relation
+from proptest import given, st_relation, st_int
+
+
+# ---------------------------------------------------------------- examples
+def test_paper_example_r1():
+    """R1 = {(a,b),(b,a)} — the simplest possible R (paper §II)."""
+    a, b = 0, 1
+    r1 = Relation.from_pairs([(a, b), (b, a)])
+    assert r1.is_valid_exchange()
+    assert r1.peers_of(a) == [b] and r1.peers_of(b) == [a]
+    assert r1.is_matching()
+
+
+def test_paper_example_r2():
+    """R2: b simultaneously exchanges with a and c; a, c only with b."""
+    a, b, c = 0, 1, 2
+    r2 = Relation.from_pairs([(a, b), (b, a), (b, c), (c, b)])
+    assert r2.is_valid_exchange()
+    assert r2.degree(b) == 2  # b needs two "pairs of hands" = two antennas
+    assert r2.degree(a) == 1 and r2.degree(c) == 1
+    assert not r2.is_matching()  # beyond get1meas — needs the new algorithm
+
+
+def test_paper_example_r3_clique():
+    """R3: each instance has a pair of hands for each other instance."""
+    r3 = Relation.clique([0, 1, 2])
+    assert r3.is_valid_exchange()
+    assert len(r3) == 6  # all ordered pairs
+    assert r3.edges() == {frozenset({0, 1}), frozenset({0, 2}), frozenset({1, 2})}
+
+
+def test_paper_propagation_example():
+    """Paper §II.B: R21={(a,b),(b,a)}, R22={(b,c),(c,b)} =>
+    R21∘R22={(a,c)}, R22∘R21={(c,a)}, union is a valid R23."""
+    a, b, c = 0, 1, 2
+    r21 = Relation.from_pairs([(a, b), (b, a)])
+    r22 = Relation.from_pairs([(b, c), (c, b)])
+    comp = r21.compose(r22)
+    assert set(comp.pairs) == {(a, c)}
+    comp_rev = r22.compose(r21)
+    assert set(comp_rev.pairs) == {(c, a)}
+    r23 = r21.propagation(r22)
+    assert r23.is_valid_exchange()
+    assert set(r23.pairs) == {(a, c), (c, a)}
+
+
+def test_invalid_relations_rejected():
+    with pytest.raises(ValueError):
+        Relation.from_pairs([(0, 1)]).validate()  # one-sided
+    with pytest.raises(ValueError):
+        Relation.from_pairs([(0, 0)]).validate()  # reflexive
+    with pytest.raises(ValueError):
+        Relation.from_edges([(1, 1)])  # self-edge
+
+
+# ------------------------------------------------------------- properties
+@given(st_relation(max_nodes=14), cases=150)
+def test_p1_inverse_equals_self(rel):
+    """P1: R⁻¹ = R."""
+    assert rel.inverse().pairs == rel.pairs
+
+
+@given(st_relation(max_nodes=10), st_relation(max_nodes=10), cases=100)
+def test_p2_propagation_is_valid_exchange(r1, r2):
+    """P2: R1∘R2 ∪ R2∘R1 is a valid exchange relation."""
+    out = r1.propagation(r2)
+    assert out.is_symmetric()
+    assert out.is_antireflexive()
+
+
+@given(st_relation(max_nodes=8), st_relation(max_nodes=8), st_relation(max_nodes=8), cases=60)
+def test_p2_composition_associative(r1, r2, r3):
+    """Composition of relations is associative (paper §II.B)."""
+    left = r1.compose(r2).compose(r3)
+    right = r1.compose(r2.compose(r3))
+    # NOTE: Relation.compose drops self-pairs at each stage (exchange
+    # semantics); compare against raw relational composition on pairs.
+    def raw_compose(p1, p2):
+        by_src = {}
+        for b, c in p2:
+            by_src.setdefault(b, set()).add(c)
+        return {(a, c) for a, b in p1 for c in by_src.get(b, ())}
+
+    raw_l = raw_compose(raw_compose(rel_pairs(r1), rel_pairs(r2)), rel_pairs(r3))
+    raw_r = raw_compose(rel_pairs(r1), raw_compose(rel_pairs(r2), rel_pairs(r3)))
+    assert raw_l == raw_r
+
+
+def rel_pairs(r):
+    return set(r.pairs)
+
+
+@given(st_relation(max_nodes=14), cases=150)
+def test_p3_special_properties(rel):
+    """P3: R is not reflexive (unless empty), symmetric, and (4) not
+    anti-symmetric whenever non-empty."""
+    assert rel.is_symmetric()
+    assert rel.is_antireflexive()
+    if len(rel) > 0:
+        assert not rel.is_reflexive()
+        assert not rel.is_antisymmetric()
+
+
+def test_p3_transitivity_counterexample():
+    """R is not transitive in general: aRb, bRa but not aRa (anti-reflexive)."""
+    r = Relation.from_edges([(0, 1)])
+    assert not r.is_transitive() or len(r) == 0
+
+
+@given(st_relation(max_nodes=14), cases=150)
+def test_p4_symmetric_closure_is_self(rel):
+    """P4: R is its own symmetric closure."""
+    assert rel.symmetric_closure().pairs == rel.pairs
+
+
+@given(st_relation(max_nodes=14), cases=150)
+def test_p5_graph_representation_roundtrip(rel):
+    """P5: R <-> G(V,E) is a bijection for symmetric anti-reflexive R."""
+    edges = rel.edge_list()
+    back = Relation.from_edges(edges, nodes=rel.nodes)
+    assert back.pairs == rel.pairs
+    # |R| = 2|E|
+    assert len(rel) == 2 * len(edges)
+
+
+@given(st_relation(max_nodes=14), st_int(0, 13), cases=100)
+def test_degree_equals_antenna_count(rel, node):
+    """degree(v) = number of simultaneous links = antennas used (paper §I:
+    'the number of peers is less or equal to the number of antennas')."""
+    peers = rel.peers_of(node)
+    assert rel.degree(node) == len(peers)
+    assert all((node, p) in rel and (p, node) in rel for p in peers)
+
+
+@given(st_relation(max_nodes=12), cases=100)
+def test_restrict_drops_failed_nodes(rel):
+    """Fault-tolerance primitive: restricting to alive nodes keeps validity
+    and removes every pair touching a dead node."""
+    nodes = sorted(rel.nodes)
+    if not nodes:
+        return
+    dead = set(nodes[:: max(1, len(nodes) // 3)][:2])
+    alive = set(nodes) - dead
+    res = rel.restrict(alive)
+    assert res.is_valid_exchange() or len(res) == 0
+    assert all(i in alive and j in alive for i, j in res.pairs)
+    # pairs fully inside the alive set survive
+    for (i, j) in rel.pairs:
+        if i in alive and j in alive:
+            assert (i, j) in res
+
+
+@given(st_relation(max_nodes=12), cases=80)
+def test_adjacency_symmetric(rel):
+    n = (max(rel.nodes) + 1) if rel.nodes else 0
+    A = rel.adjacency(n)
+    assert (A == A.T).all()
+    assert not A.diagonal().any()

@@ -1,0 +1,198 @@
+"""Tests for TDM schedules: round-robin, edge coloring, antenna budgets,
+Walker constellations, hypercube gossip."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.relation import Relation
+from repro.core.schedule import (
+    TDMSchedule,
+    WalkerConstellation,
+    antenna_constrained,
+    clique_multilink,
+    edge_coloring,
+    greedy_edge_coloring,
+    hypercube_schedule,
+    ring,
+    round_robin_tournament,
+)
+from repro.core.gossip import propagation_closure, slots_to_full_propagation
+from proptest import given, st_relation, st_int
+
+
+# ------------------------------------------------------- round robin (paper)
+@pytest.mark.parametrize("n", [2, 3, 4, 5, 8, 13, 20])
+def test_round_robin_covers_clique_exactly_once(n):
+    """The get1meas evaluation schedule: K_n decomposed into matchings, every
+    unordered pair exactly once."""
+    sched = round_robin_tournament(n)
+    expected_slots = n - 1 if n % 2 == 0 else n
+    assert len(sched) == expected_slots
+    seen = []
+    for rel in sched:
+        assert rel.is_matching()  # pairwise only — get1meas constraint
+        seen.extend(rel.edge_list())
+    assert sorted(seen) == sorted(
+        (i, j) for i in range(n) for j in range(i + 1, n)
+    )
+
+
+def test_clique_multilink_single_slot():
+    """The getMeas evaluation schedule: whole clique in ONE slot."""
+    sched = clique_multilink(8)
+    assert len(sched) == 1
+    assert sched[0].max_degree() == 7  # 7 simultaneous links per node
+    assert sched.max_antennas() == 7
+
+
+@pytest.mark.parametrize("n", [4, 6, 10])
+def test_round_robin_vs_multilink_same_union(n):
+    """Semantically equivalent schedules (paper §IV): same exchanges overall."""
+    rr = round_robin_tournament(n)
+    ml = clique_multilink(n)
+    assert rr.union().pairs == ml.union().pairs
+
+
+# ---------------------------------------------------------- edge coloring
+@given(st_relation(max_nodes=14, p=0.5), cases=200)
+def test_edge_coloring_is_partition_into_matchings(rel):
+    matchings = edge_coloring(rel)
+    for m in matchings:
+        assert m.is_matching()
+    # every edge exactly once
+    all_edges = [e for m in matchings for e in m.edge_list()]
+    assert sorted(all_edges) == sorted(rel.edge_list())
+
+
+@given(st_relation(max_nodes=14, p=0.5), cases=200)
+def test_edge_coloring_vizing_bound(rel):
+    """Misra–Gries uses at most Δ+1 colors (Vizing's theorem)."""
+    matchings = edge_coloring(rel)
+    assert len(matchings) <= rel.max_degree() + 1
+
+
+@given(st_relation(max_nodes=12, p=0.6), cases=100)
+def test_edge_coloring_matches_networkx_validity(rel):
+    """Cross-check against networkx: our coloring is a proper edge coloring
+    (no two adjacent edges share a color class)."""
+    import networkx as nx
+
+    G = nx.Graph(rel.edge_list())
+    matchings = edge_coloring(rel)
+    for m in matchings:
+        edges = m.edge_list()
+        used = set()
+        for (u, v) in edges:
+            assert u not in used and v not in used
+            used.update((u, v))
+    # sanity: number of classes is >= chromatic index lower bound Δ
+    if rel.edge_list():
+        assert len(matchings) >= max(dict(G.degree).values())
+
+
+def test_clique_coloring_sizes():
+    """Even cliques use the optimal circle-method decomposition (n-1
+    matchings); odd cliques get Vizing's Δ+1 = n."""
+    for n, expect in [(4, 3), (6, 5), (8, 7), (5, 5), (7, 7)]:
+        rel = Relation.clique(list(range(n)))
+        got = edge_coloring(rel)
+        assert len(got) == expect
+        for m in got:
+            assert m.is_matching()
+        assert sorted(e for m in got for e in m.edge_list()) == sorted(rel.edge_list())
+
+
+@given(st_relation(max_nodes=12, p=0.5), cases=100)
+def test_greedy_coloring_valid_fallback(rel):
+    matchings = greedy_edge_coloring(rel)
+    for m in matchings:
+        assert m.is_matching()
+    all_edges = [e for m in matchings for e in m.edge_list()]
+    assert sorted(all_edges) == sorted(rel.edge_list())
+    assert len(matchings) <= max(2 * rel.max_degree() - 1, 0) or not all_edges
+
+
+# ------------------------------------------------------- antenna budgets
+@given(st_relation(max_nodes=10, p=0.5), st_int(1, 4), cases=100)
+def test_antenna_constrained_respects_budget(rel, budget):
+    antennas = {v: budget for v in rel.nodes}
+    sched = antenna_constrained(rel, antennas)
+    for slot in sched:
+        for v in slot.participants():
+            assert slot.degree(v) <= budget
+    assert sched.union().pairs == rel.pairs
+
+
+def test_heterogeneous_antennas():
+    """Paper §I: different satellites may have different numbers of antennas."""
+    rel = Relation.clique([0, 1, 2, 3])
+    antennas = {0: 3, 1: 1, 2: 2, 3: 1}
+    sched = antenna_constrained(rel, antennas)
+    for slot in sched:
+        for v in slot.participants():
+            assert slot.degree(v) <= antennas[v]
+    assert sched.union().pairs == rel.pairs
+
+
+# -------------------------------------------------------------- walker
+def test_walker_visibility_valid_and_connected():
+    c = WalkerConstellation(total=24, planes=4)
+    for t in range(12):
+        rel = c.visibility(t)
+        assert rel.is_valid_exchange()
+        # intra-plane ring edges are permanent
+        for p in range(c.planes):
+            for k in range(c.per_plane):
+                assert (c.node_id(p, k), c.node_id(p, k + 1)) in rel
+
+
+def test_walker_schedule_fully_propagates():
+    """Over enough slots, every satellite's data reaches the whole
+    constellation (paper P2 composed across slots)."""
+    c = WalkerConstellation(total=24, planes=4)
+    t = slots_to_full_propagation(lambda t: c.visibility(t), c.total)
+    assert 0 < t <= 24
+
+
+def test_walker_cross_plane_duty_cycle():
+    c = WalkerConstellation(total=24, planes=4)
+    r0 = c.visibility(0, cross_plane_duty=4)
+    r1 = c.visibility(1, cross_plane_duty=4)
+    assert r0.pairs != r1.pairs  # time-varying topology
+
+
+# ------------------------------------------------------ ring / hypercube
+def test_ring_relation():
+    r = ring(8)
+    assert r.is_valid_exchange()
+    assert all(r.degree(v) == 2 for v in range(8))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_hypercube_full_propagation_in_log_n(n):
+    sched = hypercube_schedule(n)
+    assert len(sched) == n.bit_length() - 1
+    reach = propagation_closure(sched, n)
+    assert reach.all()  # log2(n) slots suffice — optimal gossip
+
+
+def test_hypercube_requires_power_of_two():
+    with pytest.raises(ValueError):
+        hypercube_schedule(6)
+
+
+# ------------------------------------------------------- schedule object
+def test_schedule_validates_slots():
+    with pytest.raises(ValueError):
+        TDMSchedule((Relation.from_pairs([(0, 1)]),))  # one-sided pair
+
+
+def test_schedule_restrict_after_failure():
+    """Node failure: surviving schedule stays valid (paper skip-slot)."""
+    sched = round_robin_tournament(6)
+    surv = sched.restrict([0, 1, 2, 4])
+    for slot in surv:
+        assert slot.is_valid_exchange() or len(slot) == 0
+        assert 3 not in slot.participants() and 5 not in slot.participants()

@@ -1,0 +1,152 @@
+"""Tests for optimizer, data pipeline, and checkpointing substrates."""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.data import pipeline
+from repro.models.config import ShapeConfig
+from repro.configs import archs
+from repro.optim import adamw
+from proptest import given, st_int
+
+
+# ------------------------------------------------------------------ adamw
+def quad_loss(p):
+    return jnp.sum(jnp.square(p["w"] - 3.0)) + jnp.sum(jnp.square(p["b"] + 1.0))
+
+
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges_quadratic(dtype):
+    cfg = adamw.OptConfig(peak_lr=0.2, warmup_steps=5, decay_steps=400,
+                          weight_decay=0.0, dtype=dtype)
+    params = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((4,))}
+    state = adamw.init_opt_state(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.grad(quad_loss)(params)
+        return adamw.apply_updates(params, grads, state, cfg)
+
+    for _ in range(300):
+        params, state, metrics = step(params, state)
+    final = float(quad_loss(params))
+    tol = 0.5 if dtype == "int8" else 1e-2
+    assert final < tol, (dtype, final)
+    assert np.isfinite(float(metrics["grad_norm"]))
+
+
+def test_adamw_schedule_shape():
+    cfg = adamw.OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100)
+    lrs = [float(adamw.schedule(jnp.asarray(s), cfg)) for s in range(120)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9          # warmup rises
+    assert abs(lrs[10] - 1e-3) < 1e-7              # peak after warmup
+    assert lrs[-1] < lrs[50] < lrs[11]             # cosine decays
+    assert lrs[-1] >= 1e-4 - 1e-9                  # floor = end_lr_frac*peak
+
+
+def test_adamw_clips_global_norm():
+    cfg = adamw.OptConfig(clip_norm=1.0, peak_lr=1.0, warmup_steps=0, decay_steps=10)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw.init_opt_state(params, cfg)
+    grads = {"w": jnp.full((4,), 100.0)}
+    _, _, metrics = adamw.apply_updates(params, grads, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_int8_moments_memory_layout():
+    cfg = adamw.OptConfig(dtype="int8")
+    params = {"w": jnp.zeros((8, 64))}
+    state = adamw.init_opt_state(params, cfg)
+    q = state["mu"]["w"]
+    assert isinstance(q, adamw.QTensor)
+    assert q.q.dtype == jnp.int8 and q.q.shape == (8, 64)
+    assert q.scale.shape == (8, 1)  # row-wise scales keep param sharding
+
+
+# ------------------------------------------------------------------- data
+def test_pipeline_deterministic():
+    cfg = archs.smoke_cfg(archs.get("gemma2-9b"))
+    shape = ShapeConfig("t", "train", 32, 4)
+    a = pipeline.host_batch(cfg, shape, step=7, seed=3)
+    b = pipeline.host_batch(cfg, shape, step=7, seed=3)
+    c = pipeline.host_batch(cfg, shape, step=8, seed=3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(a["labels"][:, :-1], a["tokens"][:, 1:])
+
+
+def test_pipeline_host_sharding_rows():
+    cfg = archs.smoke_cfg(archs.get("granite-20b"))
+    shape = ShapeConfig("t", "train", 16, 8)
+    full = pipeline.host_batch(cfg, shape, step=0)
+    part = pipeline.host_batch(cfg, shape, step=0, rows=range(2, 5))
+    np.testing.assert_array_equal(full["tokens"][2:5], part["tokens"])
+
+
+def test_pipeline_learnable_structure():
+    """The affine token walk is near-deterministic given the previous token
+    (noise ∈ {0,1,2}) — a model can learn it: every token has ≤ 3 possible
+    successors within a row."""
+    cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
+    shape = ShapeConfig("t", "train", 512, 2)
+    b = pipeline.host_batch(cfg, shape, step=0)
+    row = b["tokens"][0]
+    succ = {}
+    for t in range(len(row) - 1):
+        succ.setdefault(int(row[t]), set()).add(int(row[t + 1]))
+    assert max(len(s) for s in succ.values()) <= 3
+
+
+def test_vlm_and_audio_extras():
+    vlm = archs.smoke_cfg(archs.get("qwen2-vl-72b"))
+    b = pipeline.host_batch(vlm, ShapeConfig("t", "train", 8, 2), 0)
+    assert b["positions"].shape == (2, 8, 3)
+    aud = archs.smoke_cfg(archs.get("whisper-base"))
+    b2 = pipeline.host_batch(aud, ShapeConfig("t", "train", 8, 2), 0)
+    assert b2["enc_embeds"].shape == (2, aud.enc_frames, aud.d_model)
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16), "c": jnp.zeros((), jnp.int32)},
+    }
+    ckpt_lib.save(tmp_path, 5, tree, meta={"note": "x"}, async_save=False)
+    step, out = ckpt_lib.restore(tmp_path, target=tree)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_prune(tmp_path):
+    tree = {"w": jnp.ones((4,))}
+    for s in range(5):
+        t = ckpt_lib.save(tmp_path, s, tree, keep=2)
+    ckpt_lib.wait_all()
+    assert ckpt_lib.all_steps(tmp_path) == [3, 4]
+    assert ckpt_lib.latest_step(tmp_path) == 4
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"w": jnp.ones((128,))}
+    ckpt_lib.save(tmp_path, 1, tree, async_save=False)
+    blob = tmp_path / "step_0000000001" / "data.msgpack.zst"
+    raw = bytearray(blob.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    blob.write_bytes(bytes(raw))
+    with pytest.raises(Exception):
+        ckpt_lib.restore(tmp_path, target=tree)
+
+
+def test_checkpoint_atomic_tmp_never_visible(tmp_path):
+    tree = {"w": jnp.ones((4,))}
+    ckpt_lib.save(tmp_path, 7, tree, async_save=False)
+    assert not list(tmp_path.glob("*.tmp"))
+    assert ckpt_lib.all_steps(tmp_path) == [7]

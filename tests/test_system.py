@@ -1,0 +1,26 @@
+"""End-to-end behaviour tests for the framework's public surface.
+
+The heavyweight end-to-end paths (multi-device FL training, dry-run) have
+dedicated tests/launchers; this file checks the public API contract that the
+examples and launch scripts rely on.
+"""
+
+import importlib
+
+import pytest
+
+
+PUBLIC_MODULES = [
+    "repro.core.relation",
+    "repro.core.schedule",
+    "repro.core.ptbfla_sim",
+    "repro.core.tdm",
+    "repro.core.gossip",
+    "repro.core.fl",
+    "repro.core.compress",
+]
+
+
+@pytest.mark.parametrize("mod", PUBLIC_MODULES)
+def test_module_imports(mod):
+    importlib.import_module(mod)

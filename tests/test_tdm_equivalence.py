@@ -1,0 +1,32 @@
+"""Launcher for the multi-device sim<->collective equivalence suite.
+
+The worker needs 8 forced host devices (XLA_FLAGS is locked at first jax
+init), so it runs in a subprocess; this keeps every other test on the
+default single device as required.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow
+def test_multidevice_equivalence_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT / 'tests'}:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_multidevice_worker.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, "worker failed"
+    assert "ALL-OK" in proc.stdout
