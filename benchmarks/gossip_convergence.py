@@ -22,9 +22,10 @@ from repro.core.gossip import (
     spectral_gap,
 )
 from repro.core.relation import Relation
+from repro.constellation.contact_plan import legacy_duty_cycle_relation
+from repro.constellation.orbits import WalkerDelta
 from repro.core.schedule import (
     TDMSchedule,
-    WalkerConstellation,
     hypercube_schedule,
     ring,
 )
@@ -59,8 +60,8 @@ def main(argv=None):
             hc = hypercube_schedule(n)
             topos["hypercube"] = lambda t, hc=hc: hc[t % len(hc)]
         if n % 4 == 0:
-            c = WalkerConstellation(total=n, planes=4)
-            topos["walker 4-plane"] = lambda t, c=c: c.visibility(t)
+            g = WalkerDelta(total=n, planes=4)
+            topos["walker 4-plane"] = lambda t, g=g: legacy_duty_cycle_relation(g, t)
 
         for name, gen in topos.items():
             gap = spectral_gap(metropolis_weights(gen(0), n))

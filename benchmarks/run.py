@@ -2,6 +2,7 @@
 the framework's own perf tables.
 
   fig3        paper Fig. 3 — get1meas vs getMeas clique scaling (wall time)
+  constellation  geometry-driven contact plans: round time / ISL bytes sweep
   gossip      paper P2 quantified — consensus speed per TDM topology
   moe         MoE dispatch useful-FLOPs vs capacity factor
   tdm         collective bytes/ops of the TDM primitives (subprocess: 8 devs)
@@ -35,6 +36,11 @@ def main(argv=None):
         _banner("fig3: paper Fig.3 — TDM primitive scaling over a clique")
         from benchmarks import fig3_tdm_scaling
         fig3_tdm_scaling.main(["--full"] if args.full else [])
+
+    if want("constellation"):
+        _banner("constellation: geometry-driven round time / ISL traffic sweep")
+        from benchmarks import constellation_round_time
+        constellation_round_time.main(["--full"] if args.full else [])
 
     if want("gossip"):
         _banner("gossip: consensus speed per TDM topology (paper P2)")

@@ -1,4 +1,5 @@
-"""Checkpointing: msgpack + zstd, async save, content hashes, elastic
+"""Checkpointing: msgpack + zstd (stdlib zlib fallback when the optional
+``zstandard`` package is absent), async save, content hashes, elastic
 reshard-on-restore.
 
 Layout per checkpoint directory (``<dir>/step_<N>/``):
@@ -32,7 +33,14 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+import zlib
+
+try:  # optional: better ratio/speed when available
+    import zstandard
+except ImportError:  # pragma: no cover - depends on environment
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 _SAVE_LOCK = threading.Lock()
 _PENDING: List[threading.Thread] = []
@@ -55,6 +63,23 @@ def _path_str(p) -> str:
     if hasattr(p, "name"):
         return str(p.name)
     return str(p)
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, level=6)
+
+
+def _decompress(raw: bytes) -> bytes:
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint was written with zstd but the 'zstandard' "
+                "package is not installed (pip install zstandard)"
+            )
+        return zstandard.ZstdDecompressor().decompress(raw)
+    return zlib.decompress(raw)
 
 
 def _tree_def_hash(keys: List[str]) -> str:
@@ -99,9 +124,8 @@ def save(
                 }
                 blobs[k] = raw
             manifest["tree_hash"] = _tree_def_hash(sorted(blobs))
-            cctx = zstandard.ZstdCompressor(level=3)
             with open(tmp / "data.msgpack.zst", "wb") as f:
-                f.write(cctx.compress(msgpack.packb(blobs, use_bin_type=True)))
+                f.write(_compress(msgpack.packb(blobs, use_bin_type=True)))
             with open(tmp / "manifest.msgpack", "wb") as f:
                 f.write(msgpack.packb(manifest, use_bin_type=True))
             if final.exists():
@@ -165,9 +189,8 @@ def restore(
     d = ckpt_dir / f"step_{step:010d}"
     with open(d / "manifest.msgpack", "rb") as f:
         manifest = msgpack.unpackb(f.read(), raw=False)
-    dctx = zstandard.ZstdDecompressor()
     with open(d / "data.msgpack.zst", "rb") as f:
-        blobs = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        blobs = msgpack.unpackb(_decompress(f.read()), raw=False)
 
     arrays: Dict[str, np.ndarray] = {}
     for k, info in manifest["keys"].items():

@@ -1,0 +1,30 @@
+"""Orbital constellation subsystem: geometry-driven contact plans.
+
+Turns orbital mechanics into the exchange relations and TDM schedules the
+rest of the repo consumes — the missing link between the paper's abstract
+relation algebra (:mod:`repro.core.relation`) and its motivating deployment
+(TDM communication over inter-satellite links):
+
+- :mod:`repro.constellation.orbits`       — circular-orbit propagation for
+  Walker-delta/star constellations plus ground stations (ECI positions over
+  time; pure NumPy, deterministic).
+- :mod:`repro.constellation.links`        — line-of-sight visibility with
+  Earth occlusion, range → latency, and a free-space-path-loss link budget
+  yielding per-edge data rates (weighted time-varying graphs).
+- :mod:`repro.constellation.contact_plan` — contact windows → per-slot
+  ``Relation``s honoring per-node antenna budgets → a (streaming)
+  ``TDMSchedule`` with bandwidth-aware slot sizing.
+- :mod:`repro.constellation.cost`         — analytic per-slot wall-clock /
+  traffic model for ``get_meas`` vs ``get1_meas`` over a generated plan.
+
+Pipeline, end to end::
+
+    geom = orbits.WalkerDelta(total=20, planes=4, altitude_km=1400.0)
+    plan = contact_plan.build_contact_plan(geom, duration_s=1200, step_s=60)
+    sched = plan.schedule(antennas=3)        # ContactSchedule (.tdm, .slots)
+    est = cost.schedule_cost(sched, payload_bytes=1 << 20, mode="getmeas")
+"""
+
+from repro.constellation import contact_plan, cost, links, orbits
+
+__all__ = ["contact_plan", "cost", "links", "orbits"]

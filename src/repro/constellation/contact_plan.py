@@ -1,0 +1,318 @@
+"""Contact plans: orbital geometry → per-slot exchange relations → TDM.
+
+The pipeline the paper assumes exists but never specifies:
+
+1. propagate the constellation (:mod:`orbits`) over a sample grid,
+2. evaluate the weighted visibility graph per step (:mod:`links`),
+3. extract contact windows, and
+4. emit per-slot :class:`~repro.core.relation.Relation`s that honor
+   per-node antenna budgets (reusing ``edge_coloring`` /
+   ``antenna_constrained``) with bandwidth-aware slot sizing — a
+   :class:`ContactSchedule` whose ``.tdm`` is a plain ``TDMSchedule`` every
+   existing collective (``get_meas``/``get1_meas``/gossip) consumes as-is.
+
+Occlusion is handled by construction: a satellite with no line of sight
+simply has no pairs in that step's relation, which is exactly the paper's
+``odata=None`` skip-slot case (and what ``Relation.restrict`` produces for
+failures).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.constellation import links as links_lib
+from repro.constellation import orbits as orbits_lib
+from repro.constellation.links import Edge, Link, LinkBudget
+from repro.constellation.orbits import GroundStation, WalkerDelta
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule, antenna_constrained
+
+AntennaSpec = Union[int, Dict[int, int], None]
+
+
+def _antenna_map(antennas: AntennaSpec, nodes: Iterable[int]) -> Dict[int, int]:
+    if antennas is None:
+        return {v: 1 for v in nodes}
+    if isinstance(antennas, int):
+        return {v: antennas for v in nodes}
+    return {v: antennas.get(v, 1) for v in nodes}
+
+
+def plus_grid_candidates(geom: WalkerDelta, cross_plane: bool = True) -> List[Edge]:
+    """The +grid ISL candidate set: each satellite's terminals point at its
+    intra-plane fore/aft neighbors and (optionally) the same-slot satellite
+    in each adjacent plane. Geometry still gates every candidate — a
+    candidate pair with the Earth in between produces no contact."""
+    edges: List[Edge] = []
+    s = geom.per_plane
+    for p in range(geom.planes):
+        for k in range(s):
+            if s > 1:
+                edges.append((geom.node_id(p, k), geom.node_id(p, k + 1)))
+            if cross_plane and geom.planes > 1:
+                edges.append((geom.node_id(p, k), geom.node_id((p + 1) % geom.planes, k)))
+    return sorted({(min(a, b), max(a, b)) for a, b in edges if a != b})
+
+
+@dataclass(frozen=True)
+class ContactWindow:
+    """A maximal interval during which an edge stays feasible."""
+
+    i: int
+    j: int
+    t_start_s: float
+    t_end_s: float
+    min_rate_bps: float
+    mean_rate_bps: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.t_end_s - self.t_start_s
+
+
+@dataclass(frozen=True)
+class Slot:
+    """One emitted TDM slot: a relation plus its physical sizing."""
+
+    relation: Relation
+    t_index: int          # contact-plan time step this slot came from
+    start_s: float        # slot start on the wall clock
+    duration_s: float     # bandwidth-aware: slowest edge's transfer + delay
+    min_rate_bps: float   # bottleneck link rate inside the slot
+    max_delay_s: float    # worst one-way propagation delay inside the slot
+    links: Dict[Edge, Link] = None  # per-edge physics (keys (i, j), i < j)
+
+
+@dataclass(frozen=True)
+class ContactSchedule:
+    """A ``TDMSchedule`` plus per-slot physical metadata (aligned 1:1)."""
+
+    tdm: TDMSchedule
+    slots: Tuple[Slot, ...]
+
+    def __post_init__(self):
+        if len(self.tdm) != len(self.slots):
+            raise ValueError("tdm slots and metadata misaligned")
+
+    def __len__(self) -> int:
+        return len(self.slots)
+
+    @property
+    def busy_s(self) -> float:
+        """Total link-occupied time (sum of slot durations, gaps excluded)."""
+        return sum(s.duration_s for s in self.slots)
+
+    @property
+    def span_s(self) -> float:
+        """Wall-clock span from the first slot's start to the last slot's
+        end — includes the idle gaps between contact-plan steps."""
+        if not self.slots:
+            return 0.0
+        last = self.slots[-1]
+        return last.start_s + last.duration_s - self.slots[0].start_s
+
+    def max_antennas(self) -> int:
+        return self.tdm.max_antennas()
+
+
+@dataclass(frozen=True)
+class ContactPlan:
+    """Weighted time-varying visibility over a sample grid.
+
+    ``graphs[t]`` is the feasible-edge map at ``times[t]``; node ids are the
+    Walker layout (satellites first, then ground stations).
+    """
+
+    n_nodes: int
+    times: Tuple[float, ...]
+    graphs: Tuple[Dict[Edge, Link], ...]
+    step_s: float
+
+    # ----------------------------------------------------------- relations
+    def relation(self, t_index: int) -> Relation:
+        """The (possibly empty) exchange relation at one time step."""
+        return Relation.from_edges(
+            sorted(self.graphs[t_index]), nodes=range(self.n_nodes)
+        )
+
+    def relations(self) -> List[Relation]:
+        """One relation per time step — the time-varying schedule FL loops
+        iterate (empty relation = everyone skips the slot)."""
+        return [self.relation(t) for t in range(len(self.times))]
+
+    def link(self, t_index: int, i: int, j: int) -> Link:
+        return self.graphs[t_index][(min(i, j), max(i, j))]
+
+    # ------------------------------------------------------------- windows
+    def windows(self) -> List[ContactWindow]:
+        """Merge per-step feasibility into maximal contact windows."""
+        open_: Dict[Edge, List] = {}   # edge -> [t_start_idx, rates]
+        out: List[ContactWindow] = []
+
+        def close(edge: Edge, start_idx: int, end_idx: int, rates: List[float]):
+            out.append(
+                ContactWindow(
+                    i=edge[0],
+                    j=edge[1],
+                    t_start_s=self.times[start_idx],
+                    t_end_s=self.times[end_idx] + self.step_s,
+                    min_rate_bps=min(rates),
+                    mean_rate_bps=float(np.mean(rates)),
+                )
+            )
+
+        for t, graph in enumerate(self.graphs):
+            for edge, link in graph.items():
+                if edge in open_:
+                    open_[edge][2].append(link.rate_bps)
+                    open_[edge][1] = t
+                else:
+                    open_[edge] = [t, t, [link.rate_bps]]
+            for edge in [e for e in open_ if e not in graph]:
+                start, end, rates = open_.pop(edge)
+                close(edge, start, end, rates)
+        for edge, (start, end, rates) in sorted(open_.items()):
+            close(edge, start, end, rates)
+        out.sort(key=lambda w: (w.t_start_s, w.i, w.j))
+        return out
+
+    # ------------------------------------------------------------ schedule
+    def iter_slots(
+        self,
+        antennas: AntennaSpec = None,
+        payload_bytes: int = 1 << 20,
+        alive: Optional[Iterable[int]] = None,
+    ) -> Iterator[Slot]:
+        """Stream TDM slots in wall-clock order (lazy — no materialization).
+
+        Each time step's visibility relation is split by
+        ``antenna_constrained`` into sub-slots a node's terminal count can
+        realize; each sub-slot is sized so the payload clears the slowest
+        link it contains (plus one-way propagation). Dead/occluded nodes are
+        dropped via ``Relation.restrict`` (paper skip-slot semantics).
+        """
+        alive_s = set(alive) if alive is not None else None
+        payload_bits = 8.0 * payload_bytes
+        cursor = 0.0
+        for t in range(len(self.times)):
+            rel = self.relation(t)
+            if alive_s is not None:
+                rel = rel.restrict(alive_s)
+            if len(rel) == 0:
+                continue
+            budget = _antenna_map(antennas, rel.nodes)
+            # monotone cursor: sub-slots never overlap, even when the
+            # previous step's payload overran its sampling interval (the
+            # schedule then runs behind the plan cadence rather than
+            # emitting physically impossible concurrent slots)
+            cursor = max(cursor, float(self.times[t]))
+            for sub in antenna_constrained(rel, budget):
+                if len(sub) == 0:
+                    continue
+                links = {
+                    (i, j): self.link(t, i, j) for i, j in sub.edge_list()
+                }
+                # slot ends when its slowest transfer (incl. propagation)
+                # lands — the getMeas completion time of the sub-slot
+                duration = max(
+                    payload_bits / max(l.rate_bps, 1.0) + l.delay_s
+                    for l in links.values()
+                )
+                yield Slot(
+                    relation=sub,
+                    t_index=t,
+                    start_s=cursor,
+                    duration_s=duration,
+                    min_rate_bps=min(l.rate_bps for l in links.values()),
+                    max_delay_s=max(l.delay_s for l in links.values()),
+                    links=links,
+                )
+                cursor += duration
+
+    def schedule(
+        self,
+        antennas: AntennaSpec = None,
+        payload_bytes: int = 1 << 20,
+        alive: Optional[Iterable[int]] = None,
+        max_slots: Optional[int] = None,
+    ) -> ContactSchedule:
+        """Materialize the stream into a validated ``ContactSchedule``."""
+        slots: List[Slot] = []
+        for slot in self.iter_slots(antennas, payload_bytes, alive):
+            slots.append(slot)
+            if max_slots is not None and len(slots) >= max_slots:
+                break
+        return ContactSchedule(
+            tdm=TDMSchedule(tuple(s.relation for s in slots)), slots=tuple(slots)
+        )
+
+
+def build_contact_plan(
+    geom: WalkerDelta,
+    duration_s: float,
+    step_s: float,
+    budget: LinkBudget = LinkBudget(),
+    ground_stations: Sequence[GroundStation] = (),
+    candidates: Union[str, Sequence[Edge]] = "all",
+    max_range_km: Optional[float] = None,
+    min_rate_bps: float = 0.0,
+) -> ContactPlan:
+    """Propagate, evaluate links, and package the time-varying graph.
+
+    ``candidates`` is ``"all"`` (any pair may link — phased-array/optical
+    gimbal), ``"plus_grid"`` (fixed fore/aft + cross-plane terminals), or an
+    explicit edge list. Ground stations (node ids after the satellites)
+    participate only in ``"all"`` mode or when listed explicitly; their
+    links use the budget's elevation mask instead of limb occlusion.
+    """
+    times = orbits_lib.sample_times(duration_s, step_s)
+    tracks = orbits_lib.propagate(geom, times, ground_stations)
+    if isinstance(candidates, str):
+        if candidates == "all":
+            cand = None
+        elif candidates == "plus_grid":
+            cand = plus_grid_candidates(geom)
+        else:
+            raise ValueError(f"unknown candidate mode {candidates!r}")
+    else:
+        cand = list(candidates)
+    ground_nodes = range(geom.total, tracks.shape[1])
+    graphs = links_lib.visibility_series(
+        tracks, budget, cand, max_range_km, min_rate_bps, ground_nodes
+    )
+    return ContactPlan(
+        n_nodes=tracks.shape[1],
+        times=tuple(float(t) for t in times),
+        graphs=tuple(graphs),
+        step_s=float(step_s),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Legacy toy model (duty-cycled +grid) — kept only for the deprecated
+# repro.core.schedule.WalkerConstellation shim.
+# ---------------------------------------------------------------------------
+
+def legacy_duty_cycle_relation(
+    geom: WalkerDelta, t_slot: int, cross_plane_duty: int = 4
+) -> Relation:
+    """The pre-subsystem invented topology: permanent intra-plane ring plus
+    duty-cycled, phasing-shifted cross-plane edges. Not geometry — prefer
+    :func:`build_contact_plan`."""
+    edges: List[Tuple[int, int]] = []
+    s = geom.per_plane
+    for p in range(geom.planes):
+        for k in range(s):
+            edges.append((geom.node_id(p, k), geom.node_id(p, k + 1)))
+    for p in range(geom.planes - 1):
+        if (t_slot + p) % cross_plane_duty == 0:
+            continue  # cross-plane link outage window
+        shift = (geom.phasing * (t_slot % s)) % s
+        for k in range(s):
+            edges.append((geom.node_id(p, k), geom.node_id(p + 1, (k + shift) % s)))
+    dedup = {(min(a, b), max(a, b)) for a, b in edges if a != b}
+    return Relation.from_edges(sorted(dedup), nodes=range(geom.total))

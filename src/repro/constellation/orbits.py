@@ -1,0 +1,163 @@
+"""Circular-orbit propagation for Walker constellations and ground stations.
+
+Everything is pure NumPy and deterministic: positions are closed-form
+functions of time (no integrator state), so a contact plan generated twice
+from the same geometry is bit-identical — the property the TDM scheduler
+relies on when satellites compute the schedule independently (paper
+assumption (a): common knowledge of the schedule).
+
+Conventions: kilometres and seconds; ECI frame with the z-axis through the
+north pole; a Walker pattern ``i:t/p/f`` is ``WalkerDelta(total=t, planes=p,
+phasing=f, inclination_deg=i)``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+MU_EARTH_KM3_S2 = 398600.4418      # standard gravitational parameter
+R_EARTH_KM = 6371.0                # mean Earth radius
+EARTH_ROT_RAD_S = 7.2921159e-5     # sidereal rotation rate
+
+
+def _rot_x(a: float) -> np.ndarray:
+    c, s = math.cos(a), math.sin(a)
+    return np.array([[1.0, 0.0, 0.0], [0.0, c, -s], [0.0, s, c]])
+
+
+def _rot_z(a: float) -> np.ndarray:
+    c, s = math.cos(a), math.sin(a)
+    return np.array([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+
+
+@dataclass(frozen=True)
+class WalkerDelta:
+    """Walker constellation i:t/p/f on circular orbits.
+
+    ``pattern="delta"`` spreads the ascending nodes over 360° (Kuiper/
+    Starlink style); ``pattern="star"`` over 180° (Iridium style, polar
+    seams). Satellite (plane p, slot k) has node id ``p * per_plane + k`` —
+    the node ids the rest of the repo's relations/schedules use.
+    """
+
+    total: int = 24
+    planes: int = 4
+    phasing: int = 1
+    inclination_deg: float = 53.0
+    altitude_km: float = 550.0
+    pattern: str = "delta"
+
+    def __post_init__(self):
+        if self.total % self.planes:
+            raise ValueError("total must be divisible by planes")
+        if self.pattern not in ("delta", "star"):
+            raise ValueError(f"unknown Walker pattern {self.pattern!r}")
+
+    # ------------------------------------------------------------- layout
+    @property
+    def per_plane(self) -> int:
+        return self.total // self.planes
+
+    def node_id(self, plane: int, slot: int) -> int:
+        return (plane % self.planes) * self.per_plane + (slot % self.per_plane)
+
+    def plane_of(self, node: int) -> int:
+        return node // self.per_plane
+
+    # ----------------------------------------------------------- dynamics
+    @property
+    def orbit_radius_km(self) -> float:
+        return R_EARTH_KM + self.altitude_km
+
+    @property
+    def period_s(self) -> float:
+        return 2.0 * math.pi * math.sqrt(self.orbit_radius_km ** 3 / MU_EARTH_KM3_S2)
+
+    @property
+    def mean_motion_rad_s(self) -> float:
+        return 2.0 * math.pi / self.period_s
+
+    def raan_rad(self, plane: int) -> float:
+        spread = 2.0 * math.pi if self.pattern == "delta" else math.pi
+        return spread * plane / self.planes
+
+    def phase_rad(self, plane: int, slot: int) -> float:
+        """Argument of latitude at t=0 (in-plane spacing + inter-plane
+        phasing f: adjacent planes offset by 2π·f/total)."""
+        return (
+            2.0 * math.pi * slot / self.per_plane
+            + 2.0 * math.pi * self.phasing * plane / self.total
+        )
+
+    def positions(self, t: float | np.ndarray) -> np.ndarray:
+        """ECI positions at time(s) ``t`` (seconds).
+
+        Scalar ``t`` -> (total, 3); array (T,) -> (T, total, 3). Km.
+        """
+        ts = np.atleast_1d(np.asarray(t, dtype=np.float64))
+        r = self.orbit_radius_km
+        n = self.mean_motion_rad_s
+        inc = math.radians(self.inclination_deg)
+        out = np.empty((ts.shape[0], self.total, 3))
+        for p in range(self.planes):
+            rot = _rot_z(self.raan_rad(p)) @ _rot_x(inc)
+            for k in range(self.per_plane):
+                u = self.phase_rad(p, k) + n * ts  # (T,)
+                in_plane = np.stack(
+                    [r * np.cos(u), r * np.sin(u), np.zeros_like(u)], axis=-1
+                )
+                out[:, self.node_id(p, k)] = in_plane @ rot.T
+        return out if np.ndim(t) else out[0]
+
+
+@dataclass(frozen=True)
+class GroundStation:
+    """A fixed Earth-surface terminal, rotated into ECI with the planet."""
+
+    lat_deg: float
+    lon_deg: float
+    alt_km: float = 0.0
+    name: str = ""
+
+    def positions(self, t: float | np.ndarray) -> np.ndarray:
+        ts = np.atleast_1d(np.asarray(t, dtype=np.float64))
+        lat = math.radians(self.lat_deg)
+        r = R_EARTH_KM + self.alt_km
+        lon = math.radians(self.lon_deg) + EARTH_ROT_RAD_S * ts  # (T,)
+        out = np.stack(
+            [
+                r * math.cos(lat) * np.cos(lon),
+                r * math.cos(lat) * np.sin(lon),
+                np.full_like(lon, r * math.sin(lat)),
+            ],
+            axis=-1,
+        )
+        return out if np.ndim(t) else out[0]
+
+
+def propagate(
+    geom: WalkerDelta,
+    times: Sequence[float] | np.ndarray,
+    ground_stations: Sequence[GroundStation] = (),
+) -> np.ndarray:
+    """Stack satellite + ground-station ECI tracks: (T, total + G, 3).
+
+    Node ids 0..total-1 are satellites (Walker layout); total..total+G-1 are
+    the ground stations in the given order.
+    """
+    times = np.asarray(times, dtype=np.float64)
+    tracks = [geom.positions(times)]
+    for gs in ground_stations:
+        tracks.append(gs.positions(times)[:, None, :])
+    return np.concatenate(tracks, axis=1)
+
+
+def sample_times(duration_s: float, step_s: float) -> np.ndarray:
+    """Uniform sample grid [0, duration) — one contact-plan time step each."""
+    if step_s <= 0 or duration_s <= 0:
+        raise ValueError("duration_s and step_s must be positive")
+    return np.arange(0.0, duration_s, step_s, dtype=np.float64)

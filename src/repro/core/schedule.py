@@ -15,9 +15,10 @@ The number of colors used = number of antennas a satellite needs to realize R
 in a single slot; a schedule generator can also respect *per-node* antenna
 budgets by splitting R across slots (``antenna_constrained``).
 
-``walker_constellation`` produces time-varying visibility relations for a
-Walker-delta LEO constellation — the paper's motivating deployment (ODTS over
-inter-satellite links).
+Time-varying visibility relations for real constellations are produced by
+the :mod:`repro.constellation` subsystem (orbital propagation, Earth
+occlusion, link budgets); the ``WalkerConstellation`` class kept here is a
+deprecated duty-cycle toy shimmed over that package.
 """
 
 from __future__ import annotations
@@ -272,7 +273,17 @@ def greedy_edge_coloring(rel: Relation) -> List[Relation]:
 
 def antenna_constrained(rel: Relation, antennas: Dict[int, int]) -> TDMSchedule:
     """Split R across slots so node v never uses more than antennas[v] links
-    per slot. Matchings are packed first-fit into slots."""
+    per slot. Matchings are packed first-fit into slots. A node with a
+    zero/negative antenna budget cannot realize any exchange, so its
+    presence in R is a contradiction and raises."""
+    dead = sorted(
+        v for v in rel.participants() if antennas.get(v, 1) < 1
+    )
+    if dead:
+        raise ValueError(
+            f"nodes {dead} have edges in R but no antennas; drop them from "
+            "the relation first (Relation.restrict)"
+        )
     matchings = edge_coloring(rel)
     slots: List[List[Relation]] = []
     budgets: List[Dict[int, int]] = []
@@ -298,18 +309,17 @@ def antenna_constrained(rel: Relation, antennas: Dict[int, int]) -> TDMSchedule:
 
 
 # --------------------------------------------------------------------------
-# Walker-delta constellation visibility (the paper's deployment scenario)
+# Walker-delta constellation visibility — DEPRECATED shim
 # --------------------------------------------------------------------------
 
 @dataclass(frozen=True)
 class WalkerConstellation:
-    """Walker-delta constellation i:t/p/f (inclination, total sats, planes,
-    phasing). Produces time-varying ISL visibility relations.
+    """DEPRECATED duty-cycle toy: use :mod:`repro.constellation` instead.
 
-    Standard LEO ISL topology (+grid): each satellite keeps 2 intra-plane
-    links (fore/aft neighbors, permanent) and up to 2 inter-plane links
-    (left/right neighbors, subject to visibility windows). See e.g.
-    Huang et al., Acta Astronautica 188 (2021) — the paper's ref [8].
+    Thin shim over the constellation subsystem, kept so existing callers of
+    the invented duty-cycled +grid topology keep working. Real geometry —
+    orbital propagation, Earth occlusion, link budgets, contact windows —
+    lives in ``repro.constellation`` (``build_contact_plan`` et al.).
     """
 
     total: int = 24
@@ -318,6 +328,17 @@ class WalkerConstellation:
     inclination_deg: float = 53.0
     altitude_km: float = 550.0
 
+    def _geom(self):
+        from repro.constellation.orbits import WalkerDelta
+
+        return WalkerDelta(
+            total=self.total,
+            planes=self.planes,
+            phasing=self.phasing,
+            inclination_deg=self.inclination_deg,
+            altitude_km=self.altitude_km,
+        )
+
     @property
     def per_plane(self) -> int:
         if self.total % self.planes:
@@ -325,29 +346,21 @@ class WalkerConstellation:
         return self.total // self.planes
 
     def node_id(self, plane: int, slot: int) -> int:
-        return plane * self.per_plane + (slot % self.per_plane)
+        return self._geom().node_id(plane, slot)
 
     def visibility(self, t_slot: int, cross_plane_duty: int = 4) -> Relation:
-        """ISL visibility graph at time slot ``t_slot``.
+        """Duty-cycled +grid relation (invented outages, not geometry)."""
+        import warnings
 
-        Intra-plane fore/aft edges are permanent. Cross-plane edges follow a
-        duty cycle: near the orbital seam / high latitudes cross-links drop
-        (modeled as plane-pair (p, p+1) active unless
-        (t_slot + p) % cross_plane_duty == 0).
-        """
-        edges: List[Tuple[int, int]] = []
-        s = self.per_plane
-        for p in range(self.planes):
-            for k in range(s):
-                edges.append((self.node_id(p, k), self.node_id(p, k + 1)))
-        for p in range(self.planes - 1):
-            if (t_slot + p) % cross_plane_duty == 0:
-                continue  # cross-plane link outage window
-            shift = (self.phasing * (t_slot % s)) % s
-            for k in range(s):
-                edges.append((self.node_id(p, k), self.node_id(p + 1, (k + shift) % s)))
-        dedup = {(min(a, b), max(a, b)) for a, b in edges if a != b}
-        return Relation.from_edges(sorted(dedup), nodes=range(self.total))
+        from repro.constellation.contact_plan import legacy_duty_cycle_relation
+
+        warnings.warn(
+            "WalkerConstellation is a deprecated toy; build geometry-driven "
+            "plans with repro.constellation.contact_plan.build_contact_plan",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return legacy_duty_cycle_relation(self._geom(), t_slot, cross_plane_duty)
 
     def schedule(self, n_slots: int, cross_plane_duty: int = 4) -> TDMSchedule:
         return TDMSchedule(

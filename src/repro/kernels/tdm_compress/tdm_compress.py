@@ -18,6 +18,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships this class as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                    # (1, block)
@@ -51,7 +54,7 @@ def quantize_fwd(x: jax.Array, *, block: int = 1024, interpret: bool = False):
             jax.ShapeDtypeStruct((nb, 1), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
     )(x2)
     return q.reshape(n), s.reshape(nb)
 
@@ -70,6 +73,6 @@ def dequantize_fwd(q: jax.Array, scales: jax.Array, *, block: int = 1024,
         out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
     )(q.reshape(nb, block), scales.reshape(nb, 1))
     return x.reshape(n)

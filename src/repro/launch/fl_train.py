@@ -8,9 +8,15 @@ so the per-slot relation literally becomes the collective schedule
 
 - ``centralized``   — FedAvg via all-reduce-mean every H steps
 - ``decentralized`` — clique gossip (the paper's getMeas evaluation case)
-- ``tdm``           — gossip over an arbitrary TDM schedule (Walker
+- ``tdm``           — gossip over an arbitrary TDM schedule (constellation
                       visibility, ring, hypercube, ...), optionally int8 /
                       top-k (CHOCO) compressed
+
+Time-varying schedules: :class:`RoundFnCache` + :func:`run_tdm_rounds` drive
+one FL round per slot relation, recompiling only on unseen topologies;
+:func:`run_constellation_fl` feeds them straight from a geometry-derived
+:class:`~repro.constellation.contact_plan.ContactPlan` (the paper's actual
+deployment — occluded satellites simply have no pairs that slot).
 
 Fault tolerance: a failed/occluded satellite is dropped from the slot's
 relation (``Relation.restrict``) — the paper's skip-slot semantics — and the
@@ -121,6 +127,109 @@ def build_fl_round(
                           # vma tracking would demand pcasts throughout
     )
     return jax.jit(fn, donate_argnums=(0,))
+
+
+class RoundFnCache:
+    """Compiled FL-round functions keyed by slot relation.
+
+    Time-varying schedules revisit topologies (orbits are periodic), so the
+    jit cache is keyed on the relation's pair set — each distinct topology
+    compiles once, every revisit is a cache hit.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg,
+        mesh: Mesh,
+        n_nodes: int,
+        fl_cfg: FLConfig,
+        axis: str = "data",
+    ):
+        self.args = (cfg, opt_cfg, mesh, n_nodes, fl_cfg)
+        self.n_nodes = n_nodes
+        self.axis = axis
+        self._fns: Dict[Any, Callable] = {}
+
+    def __call__(self, rel: Relation) -> Callable:
+        key = tuple(sorted(rel.pairs))
+        if key not in self._fns:
+            self._fns[key] = build_fl_round(*self.args, rel, axis=self.axis)
+        return self._fns[key]
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundLog:
+    round: int
+    loss: float
+    consensus: float
+    n_links: int        # undirected ISLs active this round
+    alive: int          # participating satellites
+
+
+def run_tdm_rounds(
+    cache: RoundFnCache,
+    state: Any,
+    relations: Sequence[Relation],
+    batch_fn: Callable[[int], Any],
+    alive: Optional[set] = None,
+    on_round: Optional[Callable[[RoundLog], None]] = None,
+):
+    """Drive one FL round per slot relation (the time-varying-schedule mode).
+
+    ``alive`` is read *each round*, so callers may mutate it mid-flight to
+    model satellite failures; occluded/dead nodes drop out of the round's
+    relation via ``Relation.restrict`` (paper skip-slot semantics) while
+    their local training continues. Returns (state, [RoundLog, ...]).
+    """
+    n_nodes = cache.n_nodes
+    logs = []
+    for rnd, rel in enumerate(relations):
+        live = set(alive) if alive is not None else set(range(n_nodes))
+        rel_t = rel.restrict(live)
+        state, losses = cache(rel_t)(state, batch_fn(rnd))
+        log = RoundLog(
+            round=rnd,
+            loss=float(jnp.mean(losses)),
+            consensus=consensus_distance(state["params"]),
+            n_links=len(rel_t) // 2,
+            alive=len(live),
+        )
+        logs.append(log)
+        if on_round is not None:
+            on_round(log)
+    return state, logs
+
+
+def run_constellation_fl(
+    cfg: ModelConfig,
+    opt_cfg,
+    mesh: Mesh,
+    n_nodes: int,
+    fl_cfg: FLConfig,
+    plan,
+    state: Any,
+    batch_fn: Callable[[int], Any],
+    rounds: Optional[int] = None,
+    alive: Optional[set] = None,
+    on_round: Optional[Callable[[RoundLog], None]] = None,
+):
+    """Constellation-driven FL: one round per contact-plan time step.
+
+    ``plan`` is a :class:`repro.constellation.contact_plan.ContactPlan`;
+    its geometry-derived visibility relations *are* the TDM schedule. When
+    ``rounds`` exceeds the plan horizon the plan repeats (orbits are
+    periodic when the horizon is one period).
+    """
+    relations = plan.relations()
+    if rounds is not None:
+        reps = -(-rounds // max(len(relations), 1))
+        relations = (relations * reps)[:rounds]
+    cache = RoundFnCache(cfg, opt_cfg, mesh, n_nodes, fl_cfg)
+    return run_tdm_rounds(cache, state, relations, batch_fn, alive, on_round)
 
 
 def consensus_distance(stacked_params) -> float:

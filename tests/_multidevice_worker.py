@@ -267,10 +267,13 @@ def test_topk_error_feedback_on_deltas():
 # 8. TDM-FLA on a Walker constellation converges to consensus
 # ---------------------------------------------------------------------------
 def test_walker_tdm_fla():
-    from repro.core.schedule import WalkerConstellation
+    from repro.constellation.contact_plan import legacy_duty_cycle_relation
+    from repro.constellation.orbits import WalkerDelta
 
-    c = WalkerConstellation(total=N, planes=2)
-    sched = c.schedule(10)
+    geom = WalkerDelta(total=N, planes=2)
+    sched = TDMSchedule(
+        tuple(legacy_duty_cycle_relation(geom, t) for t in range(10))
+    )
     x0 = np.random.default_rng(23).normal(size=(N, 6)).astype(np.float32)
 
     def run(x):
@@ -283,6 +286,100 @@ def test_walker_tdm_fla():
     err = fl.consensus_error(list(got))
     assert err < 0.05, err
     check(f"Walker-constellation TDM-FLA consensus err {err:.4f} < 5%", True)
+
+
+# ---------------------------------------------------------------------------
+# 8b. geometry-derived contact-plan relations == Algorithm 1 oracle, and they
+#     drive a real fl_train TDM round (constellation subsystem end-to-end)
+# ---------------------------------------------------------------------------
+def test_contact_plan_equivalence():
+    """Bit-equivalence of the constellation subsystem's relations: every
+    non-empty contact-plan slot exchanged via the collective get_meas must
+    match the paper-faithful simulator, like case 1 but with topologies
+    from orbital geometry instead of random graphs."""
+    from repro.constellation import contact_plan as cp
+    from repro.constellation import orbits as orb
+
+    geom = orb.WalkerDelta(
+        total=N, planes=2, altitude_km=8062.0, inclination_deg=60.0
+    )
+    plan = cp.build_contact_plan(
+        geom,
+        duration_s=geom.period_s,
+        step_s=geom.period_s / 6,
+        max_range_km=14_000.0,
+    )
+    x = np.arange(N, dtype=np.float32) * 10 + 1
+    checked = 0
+    for t, rel in enumerate(plan.relations()):
+        if len(rel) == 0:
+            continue
+        f = shmap(
+            functools.partial(tdm.get_meas, rel=rel, axis_name="node", n=N),
+            in_specs=P("node"),
+            out_specs=(P("node"), P("node")),
+        )
+        peer_data, mask = jax.jit(f)(x)
+        peer_data = np.asarray(peer_data).reshape(N, -1)
+        mask = np.asarray(mask).reshape(N, -1)
+        received, _ = run_schedule_getmeas(
+            TDMSchedule((rel,)), {i: float(x[i]) for i in range(N)}, N, seed=t
+        )
+        for i in range(N):
+            peers = rel.peers_of(i)
+            got = [float(v) for v, m in zip(peer_data[i], mask[i]) if m]
+            want = [received[i][0][p] for p in peers] if peers else []
+            assert got == want, (t, i, got, want)
+        checked += 1
+    assert checked > 0
+    check(f"contact-plan relations == Algorithm 1 oracle ({checked} slots)", True)
+
+
+def test_constellation_drives_fl_round():
+    """A geometry-derived slot relation drives one fl_train tdm-mode round
+    on the host-device mesh (the acceptance path of the subsystem)."""
+    from repro.configs import archs
+    from repro.constellation import contact_plan as cp
+    from repro.constellation import orbits as orb
+    from repro.data import pipeline
+    from repro.launch import fl_train
+    from repro.models.config import ShapeConfig
+    from repro.optim import adamw
+
+    geom = orb.WalkerDelta(
+        total=N, planes=2, altitude_km=8062.0, inclination_deg=60.0
+    )
+    plan = cp.build_contact_plan(
+        geom,
+        duration_s=geom.period_s,
+        step_s=geom.period_s / 4,
+        max_range_km=14_000.0,
+    )
+    cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
+    opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
+    fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=1)
+    shape = ShapeConfig("fl", "train", 32, 2)
+    fl_mesh = jax.make_mesh((N,), ("data",))
+    state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, N)
+
+    def batch_fn(rnd):
+        per_node = []
+        for sat in range(N):
+            b = pipeline.host_batch(cfg, shape, step=rnd, seed=100 + sat)
+            per_node.append({k: v[None] for k, v in b.items()})
+        return {k: np.stack([pn[k] for pn in per_node]) for k in per_node[0]}
+
+    state, logs = fl_train.run_constellation_fl(
+        cfg, opt_cfg, fl_mesh, N, fl_cfg, plan, state, batch_fn, rounds=2
+    )
+    assert len(logs) == 2
+    assert all(np.isfinite(l.loss) for l in logs)
+    assert any(l.n_links > 0 for l in logs)
+    check(
+        f"constellation plan drove fl_train tdm rounds (losses "
+        f"{[round(l.loss, 2) for l in logs]})",
+        True,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -316,5 +413,7 @@ if __name__ == "__main__":
     test_topk_choco_converges()
     test_topk_error_feedback_on_deltas()
     test_walker_tdm_fla()
+    test_contact_plan_equivalence()
+    test_constellation_drives_fl_round()
     test_hierarchical_gossip()
     print("ALL-OK")

@@ -7,9 +7,10 @@ import pytest
 from repro.core import fl
 from repro.core.gossip import metropolis_weights, spectral_gap
 from repro.core.relation import Relation
+from repro.constellation.contact_plan import legacy_duty_cycle_relation
+from repro.constellation.orbits import WalkerDelta
 from repro.core.schedule import (
     TDMSchedule,
-    WalkerConstellation,
     clique_multilink,
     hypercube_schedule,
     round_robin_tournament,
@@ -73,8 +74,10 @@ def test_decentralized_fla_uniform_average(n, seed):
 def test_tdm_fla_consensus_over_walker(seed):
     """The paper's FLA over a time-varying Walker visibility schedule:
     Metropolis mixing reaches consensus on the constellation average."""
-    c = WalkerConstellation(total=12, planes=3)
-    sched = c.schedule(60)
+    geom = WalkerDelta(total=12, planes=3)
+    sched = TDMSchedule(
+        tuple(legacy_duty_cycle_relation(geom, t) for t in range(60))
+    )
     n = 12
     init = {i: np.array([float(i), -float(i)]) for i in range(n)}
 

@@ -125,6 +125,26 @@ def test_antenna_constrained_respects_budget(rel, budget):
     assert sched.union().pairs == rel.pairs
 
 
+def test_antenna_constrained_zero_antenna_node_raises():
+    """A node with edges but no antennas cannot realize any exchange —
+    the scheduler refuses instead of silently over-subscribing."""
+    rel = Relation.clique([0, 1, 2, 3])
+    with pytest.raises(ValueError, match="no antennas"):
+        antenna_constrained(rel, {0: 3, 1: 0, 2: 2, 3: 1})
+
+
+def test_antenna_constrained_zero_antenna_isolated_node_ok():
+    """Zero antennas is fine for a node with no edges (occluded satellite)."""
+    rel = Relation.from_edges([(0, 1)], nodes=range(3))
+    sched = antenna_constrained(rel, {0: 1, 1: 1, 2: 0})
+    assert sched.union().pairs == rel.pairs
+
+
+def test_edge_coloring_empty_relation():
+    assert edge_coloring(Relation.empty()) == []
+    assert edge_coloring(Relation.empty(range(5))) == []
+
+
 def test_heterogeneous_antennas():
     """Paper §I: different satellites may have different numbers of antennas."""
     rel = Relation.clique([0, 1, 2, 3])
@@ -137,6 +157,11 @@ def test_heterogeneous_antennas():
 
 
 # -------------------------------------------------------------- walker
+# (the shim is deprecated by design; these tests exercise it deliberately)
+pytestmark_walker = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+@pytestmark_walker
 def test_walker_visibility_valid_and_connected():
     c = WalkerConstellation(total=24, planes=4)
     for t in range(12):
@@ -148,6 +173,7 @@ def test_walker_visibility_valid_and_connected():
                 assert (c.node_id(p, k), c.node_id(p, k + 1)) in rel
 
 
+@pytestmark_walker
 def test_walker_schedule_fully_propagates():
     """Over enough slots, every satellite's data reaches the whole
     constellation (paper P2 composed across slots)."""
@@ -156,6 +182,7 @@ def test_walker_schedule_fully_propagates():
     assert 0 < t <= 24
 
 
+@pytestmark_walker
 def test_walker_cross_plane_duty_cycle():
     c = WalkerConstellation(total=24, planes=4)
     r0 = c.visibility(0, cross_plane_duty=4)
@@ -196,3 +223,17 @@ def test_schedule_restrict_after_failure():
     for slot in surv:
         assert slot.is_valid_exchange() or len(slot) == 0
         assert 3 not in slot.participants() and 5 not in slot.participants()
+
+
+def test_schedule_restrict_all_nodes_dead():
+    """Total failure degenerates to a valid schedule of empty slots — the
+    skip-slot semantics taken to the limit, not an error."""
+    sched = round_robin_tournament(6)
+    dead = sched.restrict([])
+    assert len(dead) == len(sched)
+    for slot in dead:
+        assert len(slot) == 0
+        assert slot.is_valid_exchange()
+        assert slot.participants() == set()
+    assert dead.max_antennas() == 0
+    assert dead.union().pairs == frozenset()
