@@ -3,6 +3,7 @@ the framework's own perf tables.
 
   fig3        paper Fig. 3 — get1meas vs getMeas clique scaling (wall time)
   constellation  geometry-driven contact plans: round time / ISL bytes sweep
+  optimizer   greedy vs rate-aware TDM schedules (never-worse by oracle)
   gossip      paper P2 quantified — consensus speed per TDM topology
   moe         MoE dispatch useful-FLOPs vs capacity factor
   tdm         collective bytes/ops of the TDM primitives (subprocess: 8 devs)
@@ -41,6 +42,11 @@ def main(argv=None):
         _banner("constellation: geometry-driven round time / ISL traffic sweep")
         from benchmarks import constellation_round_time
         constellation_round_time.main(["--full"] if args.full else [])
+
+    if want("optimizer"):
+        _banner("optimizer: greedy vs rate-aware TDM schedules")
+        from benchmarks import schedule_optimizer
+        schedule_optimizer.main(["--full"] if args.full else [])
 
     if want("gossip"):
         _banner("gossip: consensus speed per TDM topology (paper P2)")

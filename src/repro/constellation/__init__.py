@@ -16,15 +16,19 @@ relation algebra (:mod:`repro.core.relation`) and its motivating deployment
   ``TDMSchedule`` with bandwidth-aware slot sizing.
 - :mod:`repro.constellation.cost`         — analytic per-slot wall-clock /
   traffic model for ``get_meas`` vs ``get1_meas`` over a generated plan.
+- :mod:`repro.constellation.optimizer`    — rate-aware schedule search:
+  strategy portfolio (slow-first grouping, max-weight-matching peeling,
+  slew-warm ordering) scored by the cost oracle, provably never worse than
+  the greedy first-legal-coloring baseline.
 
 Pipeline, end to end::
 
     geom = orbits.WalkerDelta(total=20, planes=4, altitude_km=1400.0)
     plan = contact_plan.build_contact_plan(geom, duration_s=1200, step_s=60)
-    sched = plan.schedule(antennas=3)        # ContactSchedule (.tdm, .slots)
+    sched = plan.schedule(antennas=3, optimize="rate")   # ContactSchedule
     est = cost.schedule_cost(sched, payload_bytes=1 << 20, mode="getmeas")
 """
 
-from repro.constellation import contact_plan, cost, links, orbits
+from repro.constellation import contact_plan, cost, links, optimizer, orbits
 
-__all__ = ["contact_plan", "cost", "links", "orbits"]
+__all__ = ["contact_plan", "cost", "links", "optimizer", "orbits"]

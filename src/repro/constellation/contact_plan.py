@@ -19,8 +19,9 @@ failures).
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -32,6 +33,15 @@ from repro.core.relation import Relation
 from repro.core.schedule import TDMSchedule, antenna_constrained
 
 AntennaSpec = Union[int, Dict[int, int], None]
+
+# A colorer turns one time step's (relation, per-edge links, antenna budget,
+# previous emitted sub-slot relation) into an ordered list of sub-slot
+# relations. The schedule optimizer supplies rate-aware colorers; ``None``
+# means the default Misra–Gries + first-fit antenna packing.
+Colorer = Callable[
+    [Relation, Dict[Edge, Link], Dict[int, int], Optional[Relation]],
+    Sequence[Relation],
+]
 
 
 def _antenna_map(antennas: AntennaSpec, nodes: Iterable[int]) -> Dict[int, int]:
@@ -118,6 +128,44 @@ class ContactSchedule:
     def max_antennas(self) -> int:
         return self.tdm.max_antennas()
 
+    def restrict(
+        self, alive: Iterable[int], antennas: AntennaSpec = None
+    ) -> "ContactSchedule":
+        """Drop failed/occluded nodes and re-validate the schedule.
+
+        ``TDMSchedule.restrict`` alone is not enough for a materialized
+        (possibly optimizer-produced) schedule: the per-slot metadata would
+        keep dead edges in ``links`` and stale ``min_rate_bps`` bottlenecks.
+        This rebuilds each surviving slot from its surviving links, drops
+        slots that went empty, keeps ``tdm`` and ``slots`` aligned, and —
+        when ``antennas`` is given — re-validates the per-node budget
+        (``TDMSchedule.validate_antennas``). Slot starts/durations are kept:
+        the TDM grid was already committed and surviving transfers only get
+        faster when a slower edge drops out."""
+        alive_s = set(alive)
+        slots: List[Slot] = []
+        for slot in self.slots:
+            r = slot.relation.restrict(alive_s)
+            if len(r) == 0:
+                continue
+            links = {e: slot.links[e] for e in r.edge_list()}
+            slots.append(
+                dataclasses.replace(
+                    slot,
+                    relation=r,
+                    links=links,
+                    min_rate_bps=min(l.rate_bps for l in links.values()),
+                    max_delay_s=max(l.delay_s for l in links.values()),
+                )
+            )
+        out = ContactSchedule(
+            tdm=TDMSchedule(tuple(s.relation for s in slots)), slots=tuple(slots)
+        )
+        if antennas is not None:
+            parts = {v for s in slots for v in s.relation.participants()}
+            out.tdm.validate_antennas(_antenna_map(antennas, parts))
+        return out
+
 
 @dataclass(frozen=True)
 class ContactPlan:
@@ -186,6 +234,8 @@ class ContactPlan:
         antennas: AntennaSpec = None,
         payload_bytes: int = 1 << 20,
         alive: Optional[Iterable[int]] = None,
+        acquisition_s: float = 0.0,
+        colorer: Optional[Colorer] = None,
     ) -> Iterator[Slot]:
         """Stream TDM slots in wall-clock order (lazy — no materialization).
 
@@ -194,10 +244,18 @@ class ContactPlan:
         realize; each sub-slot is sized so the payload clears the slowest
         link it contains (plus one-way propagation). Dead/occluded nodes are
         dropped via ``Relation.restrict`` (paper skip-slot semantics).
+
+        ``acquisition_s > 0`` prices terminal retargeting: an edge that was
+        not active in the immediately preceding sub-slot pays the slew/
+        acquisition penalty before its transfer (warm edges pay nothing).
+        ``colorer`` swaps the default decomposition for a rate-aware one
+        (see :mod:`repro.constellation.optimizer`); its output is validated
+        against the antenna budget.
         """
         alive_s = set(alive) if alive is not None else None
-        payload_bits = 8.0 * payload_bytes
         cursor = 0.0
+        prev_edges: frozenset = frozenset()
+        prev_rel: Optional[Relation] = None
         for t in range(len(self.times)):
             rel = self.relation(t)
             if alive_s is not None:
@@ -210,17 +268,34 @@ class ContactPlan:
             # schedule then runs behind the plan cadence rather than
             # emitting physically impossible concurrent slots)
             cursor = max(cursor, float(self.times[t]))
-            for sub in antenna_constrained(rel, budget):
+            if colorer is None:
+                subs = list(antenna_constrained(rel, budget))
+            else:
+                subs = list(colorer(rel, self.graphs[t], budget, prev_rel))
+            for sub in subs:
                 if len(sub) == 0:
                     continue
+                if colorer is not None:
+                    for v in sub.participants():
+                        if sub.degree(v) > budget.get(v, 1):
+                            raise ValueError(
+                                f"colorer over-subscribed node {v}: "
+                                f"{sub.degree(v)} links > {budget.get(v, 1)} antennas"
+                            )
                 links = {
                     (i, j): self.link(t, i, j) for i, j in sub.edge_list()
                 }
-                # slot ends when its slowest transfer (incl. propagation)
-                # lands — the getMeas completion time of the sub-slot
+                # slot ends when its slowest transfer lands (acquisition for
+                # freshly pointed edges + serialization + propagation) — the
+                # getMeas completion time of the sub-slot
                 duration = max(
-                    payload_bits / max(l.rate_bps, 1.0) + l.delay_s
-                    for l in links.values()
+                    l.transfer_time_s(
+                        payload_bytes,
+                        acquisition_s
+                        if acquisition_s > 0.0 and e not in prev_edges
+                        else 0.0,
+                    )
+                    for e, l in links.items()
                 )
                 yield Slot(
                     relation=sub,
@@ -232,6 +307,8 @@ class ContactPlan:
                     links=links,
                 )
                 cursor += duration
+                prev_edges = frozenset(links)
+                prev_rel = sub
 
     def schedule(
         self,
@@ -239,10 +316,41 @@ class ContactPlan:
         payload_bytes: int = 1 << 20,
         alive: Optional[Iterable[int]] = None,
         max_slots: Optional[int] = None,
+        optimize: Optional[str] = None,
+        acquisition_s: float = 0.0,
+        colorer: Optional[Colorer] = None,
     ) -> ContactSchedule:
-        """Materialize the stream into a validated ``ContactSchedule``."""
+        """Materialize the stream into a validated ``ContactSchedule``.
+
+        ``optimize`` selects the decomposition policy: ``None``/``"greedy"``
+        emit the first legal coloring (Misra–Gries + first-fit packing);
+        ``"rate"`` searches the full strategy portfolio of
+        :func:`repro.constellation.optimizer.optimize_schedule` and returns
+        the schedule with the lowest oracle cost (never worse than greedy —
+        the greedy schedule is always in the candidate set); any single
+        strategy name (``"slow_first"``, ``"mwm"``, ``"overlap"``) races just
+        that strategy against greedy."""
+        if optimize not in (None, "greedy"):
+            if colorer is not None:
+                raise ValueError(
+                    "colorer and optimize are mutually exclusive: optimize "
+                    "selects its own decomposition strategies"
+                )
+            from repro.constellation.optimizer import optimize_schedule
+
+            return optimize_schedule(
+                self,
+                antennas=antennas,
+                payload_bytes=payload_bytes,
+                alive=alive,
+                acquisition_s=acquisition_s,
+                mode=optimize,
+                max_slots=max_slots,
+            ).schedule
         slots: List[Slot] = []
-        for slot in self.iter_slots(antennas, payload_bytes, alive):
+        for slot in self.iter_slots(
+            antennas, payload_bytes, alive, acquisition_s, colorer
+        ):
             slots.append(slot)
             if max_slots is not None and len(slots) >= max_slots:
                 break

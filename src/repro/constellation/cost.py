@@ -15,7 +15,7 @@ paper's constant-factor gap is exactly the serialization of the coloring.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, FrozenSet, Iterable, List, Optional
 
 from repro.constellation.contact_plan import ContactPlan, ContactSchedule
 from repro.constellation.links import Edge, Link
@@ -23,6 +23,16 @@ from repro.core.relation import Relation
 from repro.core.schedule import edge_coloring
 
 _MODES = ("getmeas", "get1meas")
+
+
+def fresh_edges(prev: Optional[Relation], cur: Relation) -> FrozenSet[Edge]:
+    """Edges of ``cur`` that were not active in the previous slot and must
+    re-point/acquire before carrying data (undirected (i, j), i < j). With
+    no previous slot every edge is fresh."""
+    cur_e = frozenset(cur.edge_list())
+    if prev is None:
+        return cur_e
+    return cur_e - frozenset(prev.edge_list())
 
 
 @dataclass(frozen=True)
@@ -50,8 +60,10 @@ class RoundCost:
         )
 
 
-def _edge_time_s(link: Link, payload_bytes: int) -> float:
-    return 8.0 * payload_bytes / max(link.rate_bps, 1.0) + link.delay_s
+def _edge_time_s(
+    link: Link, payload_bytes: int, acquisition_s: float = 0.0
+) -> float:
+    return link.transfer_time_s(payload_bytes, acquisition_s)
 
 
 def slot_cost(
@@ -59,19 +71,37 @@ def slot_cost(
     links: Dict[Edge, Link],
     payload_bytes: int,
     mode: str = "getmeas",
+    fresh: Optional[Iterable[Edge]] = None,
+    acquisition_s: float = 0.0,
 ) -> SlotCost:
     """Cost of exchanging ``payload_bytes`` over relation ``rel`` whose
-    physical edges are described by ``links``."""
+    physical edges are described by ``links``.
+
+    ``acquisition_s`` charges the slew/acquisition penalty on every edge in
+    ``fresh`` (undirected (i, j) keys; ``None`` = all edges fresh) —
+    terminals acquire in parallel, so the penalty folds into each edge's
+    completion time rather than summing across a matching."""
     if mode not in _MODES:
         raise ValueError(f"mode must be one of {_MODES}, got {mode!r}")
     matchings = edge_coloring(rel)
     if not matchings:
         return SlotCost(time_s=0.0, bytes_on_isl=0, n_matchings=0)
+    fresh_s = None if fresh is None else {tuple(e) for e in fresh}
+
+    def acq(e: Edge) -> float:
+        if acquisition_s <= 0.0:
+            return 0.0
+        return acquisition_s if (fresh_s is None or e in fresh_s) else 0.0
+
     per_matching: List[float] = []
     for m in matchings:
         per_matching.append(
             max(
-                _edge_time_s(links[(min(i, j), max(i, j))], payload_bytes)
+                _edge_time_s(
+                    links[(min(i, j), max(i, j))],
+                    payload_bytes,
+                    acq((min(i, j), max(i, j))),
+                )
                 for i, j in m.edge_list()
             )
         )
@@ -105,18 +135,37 @@ def plan_cost(
 
 
 def schedule_cost(
-    sched: ContactSchedule, payload_bytes: int, mode: str = "getmeas"
+    sched: ContactSchedule,
+    payload_bytes: int,
+    mode: str = "getmeas",
+    acquisition_s: float = 0.0,
 ) -> RoundCost:
     """Cost of an antenna-constrained :class:`ContactSchedule`, computed
     from each slot's real per-edge links. Sub-slots produced by the antenna
     splitter always serialize (they exist because the terminals are busy);
     ``mode`` governs concurrency *within* each sub-slot. In ``getmeas``
-    mode with the same payload the slots were sized for, this equals the
-    schedule's ``busy_s`` exactly."""
+    mode with the same payload and ``acquisition_s`` the slots were sized
+    for, this equals the schedule's ``busy_s`` exactly.
+
+    ``acquisition_s > 0`` prices terminal retargeting: an edge absent from
+    the immediately preceding slot pays the slew/acquisition penalty before
+    its transfer starts (edges kept warm across consecutive slots pay
+    nothing). This is the oracle the schedule optimizer minimizes."""
     total = RoundCost(0.0, 0, 0, 0.0)
+    prev: Optional[Relation] = None
+    track_fresh = acquisition_s > 0.0
     for slot in sched.slots:
-        sc = slot_cost(slot.relation, slot.links, payload_bytes, mode)
+        sc = slot_cost(
+            slot.relation,
+            slot.links,
+            payload_bytes,
+            mode,
+            fresh=fresh_edges(prev, slot.relation) if track_fresh else None,
+            acquisition_s=acquisition_s,
+        )
         total = total + RoundCost(sc.time_s, sc.bytes_on_isl, 1, sc.time_s)
+        if track_fresh:
+            prev = slot.relation
     return total
 
 

@@ -42,6 +42,9 @@ class LinkBudget:
     spectral_efficiency: float = 0.75
     atmosphere_margin_km: float = 80.0   # grazing rays through the mesosphere
     min_elevation_deg: float = 10.0      # ground-terminal horizon mask
+    # --- terminal agility: retargeting a link between slots is not free
+    slew_rate_deg_s: float = 0.0         # gimbal slew rate; 0 = instantaneous
+    acquisition_s: float = 0.0           # PAT lock time per freshly pointed link
 
     def fspl_db(self, range_km: np.ndarray | float) -> np.ndarray | float:
         """Free-space path loss, Friis in engineering units (km, GHz)."""
@@ -66,6 +69,17 @@ class LinkBudget:
         snr = 10.0 ** (np.asarray(self.snr_db(range_km)) / 10.0)
         return self.spectral_efficiency * self.bandwidth_hz * np.log2(1.0 + snr)
 
+    def slew_penalty_s(self, slew_deg: float = 90.0) -> float:
+        """Dead time before a *freshly pointed* link can carry data: gimbal
+        slew through ``slew_deg`` (a quarter turn by default — terminals
+        rarely need more between neighboring targets) plus pointing/
+        acquisition/tracking lock. 0.0 when both agility knobs are unset,
+        which preserves the pre-slew cost model exactly. An edge that was
+        already active in the previous TDM slot stays locked and pays
+        nothing — that is the optimizer's incentive to keep links warm."""
+        mech = slew_deg / self.slew_rate_deg_s if self.slew_rate_deg_s > 0 else 0.0
+        return mech + self.acquisition_s
+
 
 @dataclass(frozen=True)
 class Link:
@@ -74,6 +88,20 @@ class Link:
     range_km: float
     delay_s: float
     rate_bps: float
+
+    def transfer_time_s(
+        self, payload_bytes: int, acquisition_s: float = 0.0
+    ) -> float:
+        """Completion time for one payload over this link: optional
+        pointing/acquisition dead time, serialization at the link rate, and
+        one-way propagation. The single source of the per-edge time formula
+        — slot sizing, the cost oracle, and the optimizer's edge weights all
+        delegate here so they can never drift apart."""
+        return (
+            acquisition_s
+            + 8.0 * payload_bytes / max(self.rate_bps, 1.0)
+            + self.delay_s
+        )
 
 
 def slant_range_km(p: np.ndarray, q: np.ndarray) -> np.ndarray:

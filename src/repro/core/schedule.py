@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -72,6 +72,25 @@ class TDMSchedule:
         """Elastic rescheduling after node failure (paper skip-slot semantics)."""
         alive = list(alive)
         return TDMSchedule(tuple(r.restrict(alive) for r in self.slots))
+
+    def validate_antennas(
+        self, antennas: "int | Dict[int, int]"
+    ) -> "TDMSchedule":
+        """Check every slot against per-node antenna budgets.
+
+        Raises ``ValueError`` on the first over-subscribed node; returns
+        ``self`` so the call chains. Restriction can only shrink degrees, but
+        optimizer-produced or hand-edited schedules must be re-checked after
+        any transformation — this is that check."""
+        for t, r in enumerate(self.slots):
+            for v in r.participants():
+                cap = antennas if isinstance(antennas, int) else antennas.get(v, 1)
+                if r.degree(v) > cap:
+                    raise ValueError(
+                        f"slot {t}: node {v} needs {r.degree(v)} simultaneous "
+                        f"links but has {cap} antennas"
+                    )
+        return self
 
 
 # --------------------------------------------------------------------------
@@ -271,20 +290,54 @@ def greedy_edge_coloring(rel: Relation) -> List[Relation]:
     return [Relation.from_edges(by_color[c], nodes=rel.nodes) for c in sorted(by_color)]
 
 
-def antenna_constrained(rel: Relation, antennas: Dict[int, int]) -> TDMSchedule:
-    """Split R across slots so node v never uses more than antennas[v] links
-    per slot. Matchings are packed first-fit into slots. A node with a
-    zero/negative antenna budget cannot realize any exchange, so its
-    presence in R is a contradiction and raises."""
+def weighted_edge_coloring(
+    rel: Relation, weights: Dict[Pair, float]
+) -> List[Relation]:
+    """Rate-aware decomposition: group edges of similar cost into matchings.
+
+    ``weights`` maps undirected edges (i, j), i < j, to a cost (e.g. transfer
+    time — higher = slower). Edges are placed slowest-first into the first
+    matching with both endpoints free, so slow edges share color classes and
+    fast edges are not held hostage by a slot-straggler. Classes come out in
+    slowest-first order (≤ 2Δ-1 of them); each is a matching and their union
+    is exactly ``rel``. Missing edges weigh 0.
+    """
+    edges = rel.edge_list()
+    if not edges:
+        return []
+    order = sorted(edges, key=lambda e: (-float(weights.get(e, 0.0)), e))
+    classes: List[List[Pair]] = []
+    busy: List[set] = []
+    for (u, v) in order:
+        for cls, used in zip(classes, busy):
+            if u not in used and v not in used:
+                cls.append((u, v))
+                used.update((u, v))
+                break
+        else:
+            classes.append([(u, v)])
+            busy.append({u, v})
+    return [Relation.from_edges(cls, nodes=rel.nodes) for cls in classes]
+
+
+def pack_matchings(
+    matchings: Sequence[Relation],
+    antennas: Dict[int, int],
+    nodes: Iterable[int],
+) -> List[Relation]:
+    """First-fit pack matchings into antenna-feasible slots, in the given
+    order — callers control grouping by ordering the matchings (e.g.
+    slowest-first from ``weighted_edge_coloring``). A node with a
+    zero/negative budget that appears in any matching is a contradiction
+    and raises (it could never be placed)."""
     dead = sorted(
-        v for v in rel.participants() if antennas.get(v, 1) < 1
+        {v for m in matchings for v in m.participants() if antennas.get(v, 1) < 1}
     )
     if dead:
         raise ValueError(
             f"nodes {dead} have edges in R but no antennas; drop them from "
             "the relation first (Relation.restrict)"
         )
-    matchings = edge_coloring(rel)
     slots: List[List[Relation]] = []
     budgets: List[Dict[int, int]] = []
     for m in matchings:
@@ -301,11 +354,29 @@ def antenna_constrained(rel: Relation, antennas: Dict[int, int]) -> TDMSchedule:
             budgets.append({v: antennas.get(v, 1) - 1 for v in m.participants()})
     out = []
     for group in slots:
-        r = Relation.empty(rel.nodes)
+        r = Relation.empty(nodes)
         for m in group:
             r = r | m
         out.append(r)
-    return TDMSchedule(tuple(out))
+    return out
+
+
+def antenna_constrained(
+    rel: Relation,
+    antennas: Dict[int, int],
+    weights: Optional[Dict[Pair, float]] = None,
+) -> TDMSchedule:
+    """Split R across slots so node v never uses more than antennas[v] links
+    per slot. Matchings are packed first-fit into slots; with ``weights``
+    (per-edge costs) the rate-aware ``weighted_edge_coloring`` replaces the
+    Misra–Gries decomposition, grouping similar-cost edges. A node with a
+    zero/negative antenna budget cannot realize any exchange, so its
+    presence in R is a contradiction and raises (in ``pack_matchings``)."""
+    if weights is None:
+        matchings = edge_coloring(rel)
+    else:
+        matchings = weighted_edge_coloring(rel, weights)
+    return TDMSchedule(tuple(pack_matchings(matchings, antennas, rel.nodes)))
 
 
 # --------------------------------------------------------------------------

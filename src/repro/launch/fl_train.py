@@ -216,6 +216,10 @@ def run_constellation_fl(
     rounds: Optional[int] = None,
     alive: Optional[set] = None,
     on_round: Optional[Callable[[RoundLog], None]] = None,
+    optimize: Optional[str] = None,
+    antennas=None,
+    payload_bytes: int = 1 << 20,
+    acquisition_s: float = 0.0,
 ):
     """Constellation-driven FL: one round per contact-plan time step.
 
@@ -223,8 +227,37 @@ def run_constellation_fl(
     its geometry-derived visibility relations *are* the TDM schedule. When
     ``rounds`` exceeds the plan horizon the plan repeats (orbits are
     periodic when the horizon is one period).
+
+    ``optimize`` switches the round schedule from the raw per-step
+    visibility relations to a materialized antenna-constrained
+    ``ContactSchedule`` — ``"greedy"`` for the first-legal-coloring
+    baseline, ``"rate"`` for the min-cost schedule over the optimizer's
+    strategy portfolio for this plan window (never costlier than greedy;
+    see :mod:`repro.constellation.optimizer`). One FL round then runs per
+    emitted sub-slot. ``antennas``/``payload_bytes``/``acquisition_s`` are
+    the physical knobs the schedule is sized (and priced) with; with zero
+    slew penalty and an antenna budget covering each step's degree, greedy
+    and rate-aware emit the identical relation sequence, so training is
+    bit-for-bit unchanged — only the time accounting improves.
+
+    The schedule is built for the full constellation; ``alive`` keeps its
+    ``run_tdm_rounds`` contract (read each round, mutable mid-flight), so
+    failures and recoveries apply per round in both modes. A plan window
+    with no feasible contacts falls back to the per-step relations (all
+    empty), preserving the skip-slot semantics: local training continues.
     """
-    relations = plan.relations()
+    if optimize is None:
+        relations = plan.relations()
+    else:
+        sched = plan.schedule(
+            antennas=antennas,
+            payload_bytes=payload_bytes,
+            optimize=optimize,
+            acquisition_s=acquisition_s,
+        )
+        relations = list(sched.tdm)
+        if not relations:
+            relations = plan.relations()
     if rounds is not None:
         reps = -(-rounds // max(len(relations), 1))
         relations = (relations * reps)[:rounds]

@@ -382,6 +382,65 @@ def test_constellation_drives_fl_round():
     )
 
 
+def test_optimized_schedule_fl_matches_greedy_bitwise():
+    """The rate-aware schedule optimizer must not change *what* is exchanged,
+    only when: with zero slew penalty and an antenna budget covering every
+    step's degree, greedy and rate-aware emit the identical relation
+    sequence, so run_constellation_fl produces bit-for-bit identical
+    consensus distances and losses."""
+    from repro.configs import archs
+    from repro.constellation import contact_plan as cp
+    from repro.constellation import orbits as orb
+    from repro.data import pipeline
+    from repro.launch import fl_train
+    from repro.models.config import ShapeConfig
+    from repro.optim import adamw
+
+    geom = orb.WalkerDelta(
+        total=N, planes=2, altitude_km=8062.0, inclination_deg=60.0
+    )
+    plan = cp.build_contact_plan(
+        geom,
+        duration_s=geom.period_s,
+        step_s=geom.period_s / 4,
+        max_range_km=14_000.0,
+    )
+    cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
+    opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
+    fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=1)
+    shape = ShapeConfig("fl", "train", 32, 2)
+    fl_mesh = jax.make_mesh((N,), ("data",))
+
+    def batch_fn(rnd):
+        per_node = []
+        for sat in range(N):
+            b = pipeline.host_batch(cfg, shape, step=rnd, seed=100 + sat)
+            per_node.append({k: v[None] for k, v in b.items()})
+        return {k: np.stack([pn[k] for pn in per_node]) for k in per_node[0]}
+
+    logs_by_mode = {}
+    for optimize in ("greedy", "rate"):
+        state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, N)
+        _, logs = fl_train.run_constellation_fl(
+            cfg, opt_cfg, fl_mesh, N, fl_cfg, plan, state, batch_fn,
+            rounds=2, optimize=optimize, antennas=N,
+            payload_bytes=1 << 16, acquisition_s=0.0,
+        )
+        logs_by_mode[optimize] = logs
+
+    g, r = logs_by_mode["greedy"], logs_by_mode["rate"]
+    assert len(g) == len(r) == 2
+    for lg, lr in zip(g, r):
+        assert lg.n_links == lr.n_links and lg.alive == lr.alive
+        assert lg.loss == lr.loss, (lg.loss, lr.loss)             # bit-for-bit
+        assert lg.consensus == lr.consensus, (lg.consensus, lr.consensus)
+    check(
+        f"optimizer-enabled fl run == greedy bit-for-bit (consensus "
+        f"{[f'{l.consensus:.3e}' for l in r]})",
+        True,
+    )
+
+
 # ---------------------------------------------------------------------------
 # 9. hierarchical (pod x data) gossip on a 2x4 mesh
 # ---------------------------------------------------------------------------
@@ -415,5 +474,6 @@ if __name__ == "__main__":
     test_walker_tdm_fla()
     test_contact_plan_equivalence()
     test_constellation_drives_fl_round()
+    test_optimized_schedule_fl_matches_greedy_bitwise()
     test_hierarchical_gossip()
     print("ALL-OK")

@@ -15,6 +15,7 @@ Usage::
 from __future__ import annotations
 
 import functools
+import math
 import random
 from typing import Any, Callable, List, Sequence, Tuple
 
@@ -94,6 +95,67 @@ def st_relation(max_nodes: int = 12, p: float = 0.4) -> Strategy:
         return Relation.from_edges(edges, nodes=range(n))
 
     return Strategy(draw, "relation")
+
+
+def st_weighted_relation(
+    max_nodes: int = 12,
+    p: float = 0.4,
+    lo: float = 1e5,
+    hi: float = 1e9,
+) -> Strategy:
+    """(relation, {undirected edge: weight}) with log-uniform weights —
+    in family with the dynamic range of ISL link rates/transfer times."""
+
+    def draw(rng: random.Random):
+        rel = st_relation(max_nodes, p).draw(rng)
+        weights = {
+            e: math.exp(rng.uniform(math.log(lo), math.log(hi)))
+            for e in rel.edge_list()
+        }
+        return rel, weights
+
+    return Strategy(draw, "weighted_relation")
+
+
+def st_contact_plan(
+    max_nodes: int = 10,
+    max_steps: int = 4,
+    p: float = 0.5,
+) -> Strategy:
+    """Random synthetic :class:`ContactPlan`: random per-step visibility
+    graphs with log-uniform link rates and geometry-plausible delays. Much
+    cheaper than orbital propagation, and adversarial in ways real geometry
+    is not (steps can share no edges at all)."""
+
+    def draw(rng: random.Random):
+        from repro.constellation.contact_plan import ContactPlan
+        from repro.constellation.links import Link
+
+        n = rng.randint(2, max_nodes)
+        n_steps = rng.randint(1, max_steps)
+        step_s = rng.uniform(10.0, 120.0)
+        graphs = []
+        for _ in range(n_steps):
+            g = {}
+            for i in range(n):
+                for j in range(i + 1, n):
+                    if rng.random() < p:
+                        rate = 10.0 ** rng.uniform(5.0, 9.0)
+                        rng_km = rng.uniform(100.0, 5000.0)
+                        g[(i, j)] = Link(
+                            range_km=rng_km,
+                            delay_s=rng_km / 299_792.458,
+                            rate_bps=rate,
+                        )
+            graphs.append(g)
+        return ContactPlan(
+            n_nodes=n,
+            times=tuple(t * step_s for t in range(n_steps)),
+            graphs=tuple(graphs),
+            step_s=step_s,
+        )
+
+    return Strategy(draw, "contact_plan")
 
 
 def given(*strategies: Strategy, cases: int = DEFAULT_CASES, seed: int = 0):

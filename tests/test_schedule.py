@@ -15,11 +15,13 @@ from repro.core.schedule import (
     edge_coloring,
     greedy_edge_coloring,
     hypercube_schedule,
+    pack_matchings,
     ring,
     round_robin_tournament,
+    weighted_edge_coloring,
 )
 from repro.core.gossip import propagation_closure, slots_to_full_propagation
-from proptest import given, st_relation, st_int
+from proptest import given, st_relation, st_int, st_weighted_relation
 
 
 # ------------------------------------------------------- round robin (paper)
@@ -104,7 +106,7 @@ def test_clique_coloring_sizes():
         assert sorted(e for m in got for e in m.edge_list()) == sorted(rel.edge_list())
 
 
-@given(st_relation(max_nodes=12, p=0.5), cases=100)
+@given(st_relation(max_nodes=14, p=0.5), cases=200)
 def test_greedy_coloring_valid_fallback(rel):
     matchings = greedy_edge_coloring(rel)
     for m in matchings:
@@ -112,6 +114,49 @@ def test_greedy_coloring_valid_fallback(rel):
     all_edges = [e for m in matchings for e in m.edge_list()]
     assert sorted(all_edges) == sorted(rel.edge_list())
     assert len(matchings) <= max(2 * rel.max_degree() - 1, 0) or not all_edges
+
+
+@given(st_weighted_relation(max_nodes=14, p=0.5), cases=200)
+def test_weighted_coloring_is_partition_into_matchings(relw):
+    """Rate-aware coloring keeps the structural invariants of the rate-blind
+    one: every color class a matching, classes partition the edge set, class
+    count within the greedy 2Δ-1 bound."""
+    rel, weights = relw
+    matchings = weighted_edge_coloring(rel, weights)
+    for m in matchings:
+        assert m.is_matching()
+    all_edges = [e for m in matchings for e in m.edge_list()]
+    assert sorted(all_edges) == sorted(rel.edge_list())
+    assert len(matchings) <= max(2 * rel.max_degree() - 1, 0) or not all_edges
+
+
+@given(st_weighted_relation(max_nodes=14, p=0.5), cases=200)
+def test_weighted_coloring_groups_slowest_first(relw):
+    """The globally slowest edge anchors the first color class, and class
+    bottlenecks never increase down the list (slow edges share classes, so
+    fast edges are not held hostage by a straggler)."""
+    rel, weights = relw
+    matchings = weighted_edge_coloring(rel, weights)
+    if not matchings:
+        return
+    bottlenecks = [max(weights[e] for e in m.edge_list()) for m in matchings]
+    assert bottlenecks[0] == max(weights.values())
+    assert all(a >= b for a, b in zip(bottlenecks, bottlenecks[1:]))
+
+
+@given(st_weighted_relation(max_nodes=10, p=0.5), st_int(1, 4), cases=200)
+def test_pack_matchings_respects_budget_and_covers(relw, budget):
+    """First-fit packing of any matching decomposition stays inside the
+    antenna budget and loses no edges, regardless of the matching order."""
+    rel, weights = relw
+    antennas = {v: budget for v in rel.nodes}
+    packed = pack_matchings(weighted_edge_coloring(rel, weights), antennas, rel.nodes)
+    union = Relation.empty(rel.nodes)
+    for slot in packed:
+        for v in slot.participants():
+            assert slot.degree(v) <= budget
+        union = union | slot
+    assert union.pairs == rel.pairs
 
 
 # ------------------------------------------------------- antenna budgets
@@ -237,3 +282,70 @@ def test_schedule_restrict_all_nodes_dead():
         assert slot.participants() == set()
     assert dead.max_antennas() == 0
     assert dead.union().pairs == frozenset()
+
+
+def test_validate_antennas_accepts_and_rejects():
+    sched = TDMSchedule((Relation.clique([0, 1, 2, 3]),))
+    assert sched.validate_antennas(3) is sched
+    with pytest.raises(ValueError, match="slot 0: node"):
+        sched.validate_antennas(2)
+    # dict budgets default to 1 antenna for unlisted nodes
+    with pytest.raises(ValueError, match="has 1 antennas"):
+        sched.validate_antennas({0: 3, 1: 3, 2: 3})
+
+
+@given(st_relation(max_nodes=10, p=0.5), st_int(1, 3), cases=100)
+def test_restrict_preserves_antenna_validity(rel, budget):
+    """Regression (optimizer PR): restriction only shrinks degrees, so a
+    schedule valid for a budget stays valid — validate_antennas must agree
+    on every restricted suffix of the node set."""
+    antennas = {v: budget for v in rel.nodes}
+    sched = antenna_constrained(rel, antennas)
+    alive = [v for v in sorted(rel.nodes) if v % 2 == 0]
+    surv = sched.restrict(alive)
+    surv.validate_antennas(budget)  # must not raise
+    assert surv.union().pairs == rel.restrict(alive).pairs
+
+
+def test_restrict_optimized_contact_schedule_revalidates():
+    """Regression (previously uncovered): restricting an *optimized*
+    ContactSchedule must rebuild per-slot metadata — dead edges dropped from
+    ``links``, bottleneck rates recomputed, tdm/slots kept aligned — and
+    re-validate the antenna budget. ``TDMSchedule.restrict`` alone left the
+    ContactSchedule's slot metadata stale."""
+    from repro.constellation.contact_plan import ContactPlan
+    from repro.constellation.links import Link
+
+    graphs = []
+    for t in range(3):
+        g = {}
+        for i in range(6):
+            for j in range(i + 1, 6):
+                if (i + j + t) % 2 == 0:
+                    g[(i, j)] = Link(
+                        range_km=1000.0 * (1 + i),
+                        delay_s=0.003 * (1 + i),
+                        rate_bps=1e6 * (1 + j),
+                    )
+        graphs.append(g)
+    plan = ContactPlan(
+        n_nodes=6, times=(0.0, 60.0, 120.0), graphs=tuple(graphs), step_s=60.0
+    )
+    sched = plan.schedule(antennas=2, payload_bytes=1 << 16,
+                          optimize="rate", acquisition_s=0.5)
+    alive = {0, 1, 2, 4}
+    surv = sched.restrict(alive, antennas=2)
+    assert len(surv.tdm) == len(surv.slots)  # alignment re-validated
+    for slot in surv.slots:
+        assert alive.issuperset(slot.relation.participants())
+        # metadata rebuilt from surviving links only
+        assert set(slot.links) == set(slot.relation.edge_list())
+        assert slot.min_rate_bps == min(l.rate_bps for l in slot.links.values())
+        assert slot.max_delay_s == max(l.delay_s for l in slot.links.values())
+        assert len(slot.relation) > 0  # empty slots dropped
+    surv.tdm.validate_antennas(2)  # must not raise
+    # union of surviving slots == restriction of the original union
+    merged = Relation.empty(range(6))
+    for r in surv.tdm:
+        merged = merged | r
+    assert merged.pairs == sched.tdm.restrict(alive).union().pairs
