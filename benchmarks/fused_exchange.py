@@ -1,0 +1,202 @@
+"""Fused vs per-leaf TDM exchange: collective counts (HLO-verified) and
+per-round wall time, swept over model size × relation degree.
+
+The structural claim (core/fused.py): a per-leaf round issues L×M
+collective-permutes for an L-leaf model over an M-matching relation (2M per
+leaf-payload-component for compressed modes), while the fused flat-buffer
+engine issues exactly M (2M for int8: payload + scales) — independent of L.
+Collective counts come from the compiled HLO via
+``launch.hlo_stats.collective_stats``; wall time is measured on the forced
+8-host-device mesh (launch overhead dominates there exactly as it does on a
+real mesh, which is the effect being benchmarked).
+
+Emits one ``BENCH {json}`` line per measured cell plus a summary row, and
+optionally writes the full row list to ``--out`` (the nightly workflow
+uploads it so the perf trajectory is recorded).
+
+Run as its own process (device count lock):
+  PYTHONPATH=src python -m benchmarks.fused_exchange --smoke
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import fl, tdm
+from repro.core.relation import Relation
+from repro.core.schedule import ring
+from repro.launch.hlo_stats import collective_stats
+
+N = 8
+
+
+def make_tree(n_leaves: int, leaf_elems: int, seed: int = 0):
+    """Synthetic L-leaf model, stacked on the node axis. Shapes are jittered
+    (+leaf index) so no two leaves are identical arrays XLA could CSE."""
+    rng = np.random.default_rng(seed)
+    return {
+        f"w{i:03d}": jnp.asarray(
+            rng.normal(size=(N, leaf_elems + i)).astype(np.float32)
+        )
+        for i in range(n_leaves)
+    }
+
+
+def relations():
+    return {
+        "ring": ring(N),                                   # degree 2
+        "circ4": Relation.from_edges(
+            [(i, (i + d) % N) for i in range(N) for d in (1, 2)]
+        ),                                                 # degree 4
+        "clique": Relation.clique(list(range(N))),         # degree 7
+    }
+
+
+def build_round_fn(mesh, rel, cfg):
+    def body(t):
+        t = jax.tree.map(lambda x: x[0], t)
+        out, _ = fl.tdm_fla_round(t, rel, "node", N, cfg)
+        return jax.tree.map(lambda x: x[None], out)
+
+    # check_rep=False: the fused int8 path may lower through pallas_call,
+    # which has no shard_map replication rule
+    return jax.jit(
+        shard_map(
+            body, mesh=mesh, in_specs=(P("node"),), out_specs=P("node"),
+            check_rep=False,
+        )
+    )
+
+
+def measure(fn, tree, reps: int):
+    # time the AOT executable itself — fn(tree) would re-trace and compile
+    # a second copy through the jit dispatch cache
+    compiled = fn.lower(tree).compile()
+    stats = collective_stats(compiled.as_text())
+    out = compiled(tree)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = compiled(tree)
+    jax.block_until_ready(out)
+    wall = (time.perf_counter() - t0) / reps
+    return stats, wall
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true", help="single small cell")
+    p.add_argument("--full", action="store_true", help="paper-size sweeps")
+    p.add_argument("--reps", type=int, default=None)
+    p.add_argument("--out", default=None, help="write BENCH rows as json")
+    args = p.parse_args(argv)
+
+    if args.smoke:
+        models = [(12, 1 << 10)]
+        rel_names = ["ring", "clique"]
+        modes = ["none", "int8"]
+        reps = args.reps or 3
+    elif args.full:
+        models = [(12, 1 << 10), (48, 1 << 12), (96, 1 << 14)]
+        rel_names = ["ring", "circ4", "clique"]
+        modes = ["none", "int8", "topk"]
+        reps = args.reps or 10
+    else:
+        models = [(12, 1 << 10), (48, 1 << 12)]
+        rel_names = ["ring", "clique"]
+        modes = ["none", "int8"]
+        reps = args.reps or 5
+
+    mesh = Mesh(np.array(jax.devices()[:N]), ("node",))
+    rels = relations()
+    rows = []
+    print(
+        f"{'model':<12} {'rel':<7} {'mode':<5} {'engine':<8} "
+        f"{'permutes':>8} {'coll MB':>8} {'wall ms':>9}"
+    )
+    for n_leaves, leaf_elems in models:
+        tree = make_tree(n_leaves, leaf_elems)
+        for rel_name in rel_names:
+            rel = rels[rel_name]
+            n_matchings = len(tdm.edge_coloring(rel))
+            for mode in modes:
+                cell = {}
+                for engine in ("perleaf", "fused"):
+                    cfg = fl.TDMFLAConfig(
+                        compression=mode, topk_k=64, fused=(engine == "fused")
+                    )
+                    fn = build_round_fn(mesh, rel, cfg)
+                    stats, wall = measure(fn, tree, reps)
+                    permutes = stats.count_by_kind.get("collective-permute", 0)
+                    row = dict(
+                        bench="fused_exchange",
+                        n_leaves=n_leaves,
+                        leaf_elems=leaf_elems,
+                        relation=rel_name,
+                        n_matchings=n_matchings,
+                        mode=mode,
+                        engine=engine,
+                        permutes=permutes,
+                        collective_bytes=stats.total_bytes,
+                        wall_ms=wall * 1e3,
+                    )
+                    rows.append(row)
+                    cell[engine] = row
+                    print(
+                        f"L={n_leaves:<4}x{leaf_elems:<5} {rel_name:<7} "
+                        f"{mode:<5} {engine:<8} {permutes:>8.0f} "
+                        f"{stats.total_bytes/2**20:>8.2f} {wall*1e3:>9.2f}"
+                    )
+                    print("BENCH " + json.dumps(row), flush=True)
+                speedup = cell["perleaf"]["wall_ms"] / max(
+                    cell["fused"]["wall_ms"], 1e-9
+                )
+                summary = dict(
+                    bench="fused_exchange_summary",
+                    n_leaves=n_leaves,
+                    leaf_elems=leaf_elems,
+                    relation=rel_name,
+                    mode=mode,
+                    n_matchings=n_matchings,
+                    permutes_perleaf=cell["perleaf"]["permutes"],
+                    permutes_fused=cell["fused"]["permutes"],
+                    permute_reduction=cell["perleaf"]["permutes"]
+                    / max(cell["fused"]["permutes"], 1),
+                    speedup=speedup,
+                )
+                rows.append(summary)
+                print("BENCH " + json.dumps(summary), flush=True)
+
+    # headline: uncompressed cells must show M vs L*M and a wall-time win
+    best = max(
+        (r for r in rows if r["bench"] == "fused_exchange_summary"),
+        key=lambda r: r["speedup"],
+    )
+    print(
+        f"\nbest fused speedup: {best['speedup']:.2f}x "
+        f"(L={best['n_leaves']}, {best['relation']}, mode={best['mode']}; "
+        f"permutes {best['permutes_perleaf']:.0f} -> {best['permutes_fused']:.0f})"
+    )
+    if args.out:
+        out_path = pathlib.Path(args.out)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rows, indent=1))
+        print(f"wrote {len(rows)} rows to {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

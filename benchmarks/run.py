@@ -7,6 +7,8 @@ the framework's own perf tables.
   gossip      paper P2 quantified — consensus speed per TDM topology
   moe         MoE dispatch useful-FLOPs vs capacity factor
   tdm         collective bytes/ops of the TDM primitives (subprocess: 8 devs)
+  fused       fused vs per-leaf exchange engine: M vs L×M collectives + wall
+              time (subprocess: 8 devs)
   roofline    the 40-cell dry-run roofline table (reads experiments/dryrun)
 
 ``python -m benchmarks.run``            runs everything quick
@@ -24,6 +26,22 @@ import sys
 
 def _banner(name: str):
     print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
+
+
+def _subprocess_bench(module: str, extra_args=(), timeout: int = 1200):
+    """Run a benchmark module in its own process (needed when it forces its
+    own XLA device count, which locks at first jax init)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    proc = subprocess.run(
+        [sys.executable, "-m", module, *extra_args],
+        cwd=root,
+        env={**os.environ, "PYTHONPATH": f"{root/'src'}:{root}"},
+        capture_output=True, text=True, timeout=timeout,
+    )
+    print(proc.stdout)
+    if proc.returncode != 0:
+        print(proc.stderr)
+        raise SystemExit(f"{module} failed")
 
 
 def main(argv=None):
@@ -60,17 +78,15 @@ def main(argv=None):
 
     if want("tdm"):
         _banner("tdm: collective bytes of get1meas / getMeas / int8 (8 devices)")
-        root = pathlib.Path(__file__).resolve().parents[1]
-        proc = subprocess.run(
-            [sys.executable, "-m", "benchmarks.tdm_collectives"],
-            cwd=root,
-            env={**os.environ, "PYTHONPATH": f"{root/'src'}:{root}"},
-            capture_output=True, text=True, timeout=1200,
+        _subprocess_bench("benchmarks.tdm_collectives")
+
+    if want("fused"):
+        _banner("fused: flat-buffer exchange engine vs per-leaf (8 devices)")
+        _subprocess_bench(
+            "benchmarks.fused_exchange",
+            ["--full"] if args.full else ["--smoke"],
+            timeout=3600,
         )
-        print(proc.stdout)
-        if proc.returncode != 0:
-            print(proc.stderr)
-            raise SystemExit("tdm_collectives failed")
 
     if want("roofline"):
         _banner("roofline: 40-cell dry-run table (single-pod 16x16)")

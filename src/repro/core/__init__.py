@@ -7,6 +7,7 @@
 - gossip.py      mixing matrices, spectral gaps, propagation closure (P2)
 - fl.py          the 3 generic FLAs: centralized / decentralized / TDM
 - compress.py    ISL payload compression (top-k + error feedback, int8)
+- fused.py       fused flat-buffer exchange engine (M collectives/round)
 """
 
 from repro.core.relation import Relation

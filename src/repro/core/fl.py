@@ -30,9 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compress as compress_lib
 from repro.core import tdm
-from repro.core.gossip import metropolis_weights, uniform_neighbor_weights
 from repro.core.ptbfla_sim import PTBFLASimulator, _Node, _as_gen
 from repro.core.relation import Relation
 from repro.core.schedule import TDMSchedule, clique_multilink
@@ -205,8 +203,12 @@ class TDMFLAConfig:
           'get1meas'     — single-link; matchings serialized (the baseline
                            primitive the paper generalizes)
     compression: 'none' | 'int8' | 'topk'
-    topk_k: payload size for 'topk'
+    topk_k: payload size for 'topk' (per leaf; the fused engine scales it)
     local_steps: local optimizer steps between TDM slots (H in local-SGD)
+    fused: route :func:`tdm_fla_round` through the flat-buffer exchange
+           engine (:mod:`repro.core.fused`) — M collectives per round
+           instead of L×M for an L-leaf model. Uncompressed results are
+           bit-identical; see fused.py for the compressed-mode contract.
     """
 
     comm: str = "getmeas"
@@ -214,6 +216,7 @@ class TDMFLAConfig:
     topk_k: int = 64
     choco_gamma: float = 0.4
     local_steps: int = 1
+    fused: bool = True
 
     def __post_init__(self):
         if self.comm not in ("getmeas", "get1meas"):
@@ -259,22 +262,7 @@ def tdm_mix(
     if cfg.comm == "getmeas":
         return tdm.gossip_avg(x, rel, axis_name, n), residual
     # get1meas: serialized matchings — same algebra, chained transfers.
-    W = metropolis_weights(rel, n)
-    idx = jax.lax.axis_index(axis_name)
-    self_w = jnp.asarray(np.diag(W), dtype=x.dtype)[idx]
-    out = self_w * x
-    peer_data, mask = tdm.get1_meas(x, rel, axis_name, n)
-    # weight received values: receiver i applies W[i, peer_p] to its p-th peer
-    max_deg = rel.max_degree()
-    wmat = np.zeros((n, max_deg))
-    for i in range(n):
-        for p, j in enumerate(rel.peers_of(i)):
-            wmat[i, p] = W[i, j]
-    w_row = jnp.asarray(wmat, dtype=x.dtype)[idx]  # (max_deg,)
-    out = out + jnp.sum(
-        w_row.reshape((-1,) + (1,) * x.ndim) * peer_data.astype(x.dtype), axis=0
-    )
-    return out, residual
+    return tdm.gossip_avg_serial(x, rel, axis_name, n), residual
 
 
 def tdm_fla_round(
@@ -285,7 +273,24 @@ def tdm_fla_round(
     cfg: TDMFLAConfig = TDMFLAConfig(),
     residuals: Any = None,
 ) -> Tuple[Any, Any]:
-    """Apply :func:`tdm_mix` to every leaf of a parameter pytree."""
+    """One TDM-FLA mixing round over a parameter pytree.
+
+    With ``cfg.fused`` (the default) the pytree is flattened into contiguous
+    dtype-bucketed buffers and mixed through the fused exchange engine —
+    exactly M collectives per round for an M-matching relation, regardless
+    of leaf count. ``cfg.fused=False`` applies :func:`tdm_mix` leaf by leaf
+    (L×M collectives); both paths are bit-identical when uncompressed.
+
+    The ``residuals`` carry (CHOCO state) is path-specific: per-leaf returns
+    a pytree of per-leaf states, fused returns per-buffer states. Pass back
+    only what the same path returned.
+    """
+    if cfg.fused:
+        from repro.core import fused as fused_lib
+
+        return fused_lib.fused_tdm_fla_round(
+            params, rel, axis_name, n, cfg, residuals
+        )
     leaves, treedef = jax.tree.flatten(params)
     if residuals is None:
         res_leaves = [None] * len(leaves)

@@ -1,0 +1,296 @@
+"""Fused flat-buffer TDM exchange engine: O(matchings) collectives per round.
+
+Motivation (perf): :func:`repro.core.fl.tdm_mix` applied leaf-by-leaf issues
+O(L×M) small ``ppermute``s per round for a model with L parameter leaves and
+a relation colored into M matchings — collective-launch latency dominates on
+real meshes long before the ISL/ICI link saturates. This module flattens the
+parameter pytree ONCE per round into dtype-bucketed, block-padded contiguous
+buffers, runs the whole mixing step on the fused buffer(s), and unflattens:
+
+    per-leaf:  L×M collective-permutes  (2–3 L×M for compressed payloads)
+    fused:       M collective-permutes  (2M int8: payload+scales; 2M CHOCO)
+
+per dtype bucket — for the common all-fp32 model, exactly M. The claim is
+HLO-verified in tests (``tests/_fused_worker.py``) and measured by
+``benchmarks/fused_exchange.py``.
+
+Numerical contract per compression mode:
+
+- ``none`` (both ``getmeas`` and ``get1meas``): BIT-IDENTICAL to the
+  per-leaf path. Mixing is elementwise (per-node scalar weights), so
+  gossiping the concatenation equals concatenating the gossips; both paths
+  share the very same :func:`repro.core.tdm.gossip_avg` /
+  :func:`~repro.core.tdm.gossip_avg_serial` code.
+- ``int8``: Metropolis gossip with BLOCKWISE-quantized payloads via the
+  Pallas ``tdm_compress`` kernels — quantize once per round, then per
+  matching one fused dequant+weighted-accumulate pass over the receive
+  buffer. Blockwise scales (one per ``block`` entries) replace the per-leaf
+  path's per-tensor scale, so results differ from the per-leaf path by
+  quantization granularity only (tighter: a block's absmax ≤ the tensor's).
+  The per-leaf path also uses uniform 1/(1+Δ) weights where the fused path
+  uses exact Metropolis weights — identical on regular relations.
+- ``topk`` (CHOCO-Gossip): the compression state lives on the fused buffer
+  and top-k selection is GLOBAL over the bucket instead of per-leaf; the
+  per-round payload budget is matched by scaling k to ``topk_k × n_leaves``.
+  Same convergence guarantees (it is the same CHOCO recursion on the
+  concatenated state); per-round outputs differ from per-leaf by which
+  coordinates the shared budget selects.
+
+All entry points run inside ``shard_map`` over the node axis, like
+everything in :mod:`repro.core.tdm`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tdm
+from repro.core.relation import Relation
+from repro.kernels.tdm_compress import ref as q_ref
+from repro.kernels.tdm_compress import tdm_compress as q_kernel
+
+DEFAULT_BLOCK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer spec: static (Python-side) layout of a pytree
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LeafSlot:
+    """Where one pytree leaf lives inside its dtype bucket's flat buffer."""
+
+    bucket: str                 # canonical dtype name, e.g. "float32"
+    offset: int                 # element offset into the bucket buffer
+    size: int                   # number of elements
+    shape: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static layout: leaf -> (bucket, offset) plus padded bucket sizes.
+
+    Buffers are padded to a multiple of ``block`` so the Pallas quantization
+    kernels tile them exactly; padding lanes hold zeros and never travel
+    back into the tree.
+    """
+
+    treedef: Any
+    slots: Tuple[LeafSlot, ...]
+    bucket_sizes: Tuple[Tuple[str, int], ...]   # (bucket, padded elements)
+    bucket_leaves: Tuple[Tuple[str, int], ...]  # (bucket, n leaves)
+    block: int
+
+    @property
+    def buckets(self) -> List[str]:
+        return [b for b, _ in self.bucket_sizes]
+
+    def padded_size(self, bucket: str) -> int:
+        return dict(self.bucket_sizes)[bucket]
+
+    def n_leaves(self, bucket: str) -> int:
+        return dict(self.bucket_leaves)[bucket]
+
+
+def build_spec(params: Any, block: int = DEFAULT_BLOCK) -> FlatSpec:
+    """Lay out ``params``' leaves into dtype-bucketed contiguous buffers.
+
+    Leaves keep tree order within their bucket; buckets are sorted by dtype
+    name so the layout is deterministic for a given tree structure.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    by_bucket: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    slots = []
+    for leaf in leaves:
+        bucket = jnp.asarray(leaf).dtype.name
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        off = by_bucket.get(bucket, 0)
+        slots.append(LeafSlot(bucket, off, size, tuple(leaf.shape)))
+        by_bucket[bucket] = off + size
+        counts[bucket] = counts.get(bucket, 0) + 1
+    sizes = tuple(
+        (b, -(-by_bucket[b] // block) * block) for b in sorted(by_bucket)
+    )
+    return FlatSpec(
+        treedef=treedef,
+        slots=tuple(slots),
+        bucket_sizes=sizes,
+        bucket_leaves=tuple((b, counts[b]) for b in sorted(by_bucket)),
+        block=block,
+    )
+
+
+def flatten_pytree(spec: FlatSpec, params: Any) -> Dict[str, jax.Array]:
+    """Pytree -> {dtype name: flat padded buffer} (one concatenate per bucket)."""
+    leaves, treedef = jax.tree.flatten(params)
+    if treedef != spec.treedef:
+        raise ValueError(f"tree mismatch: {treedef} != {spec.treedef}")
+    parts: Dict[str, List[jax.Array]] = {b: [] for b in spec.buckets}
+    used: Dict[str, int] = {b: 0 for b in spec.buckets}
+    for slot, leaf in zip(spec.slots, leaves):
+        parts[slot.bucket].append(jnp.asarray(leaf).reshape(-1))
+        used[slot.bucket] += slot.size
+    out = {}
+    for bucket in spec.buckets:
+        pad = spec.padded_size(bucket) - used[bucket]
+        if pad:
+            parts[bucket].append(jnp.zeros((pad,), dtype=jnp.dtype(bucket)))
+        out[bucket] = (
+            jnp.concatenate(parts[bucket])
+            if len(parts[bucket]) > 1
+            else parts[bucket][0]
+        )
+    return out
+
+
+def unflatten_pytree(spec: FlatSpec, buffers: Dict[str, jax.Array]) -> Any:
+    """Inverse of :func:`flatten_pytree` (static slices — free at trace time)."""
+    leaves = []
+    for slot in spec.slots:
+        buf = buffers[slot.bucket]
+        leaves.append(buf[slot.offset : slot.offset + slot.size].reshape(slot.shape))
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Fused buffer mixing
+# ---------------------------------------------------------------------------
+
+def _resolve_impl(impl: str) -> str:
+    """'auto' -> the Pallas kernels on TPU, their validated jnp oracle
+    elsewhere (interpret-mode Pallas is a debugging path, not a hot path)."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in ("pallas", "pallas_interpret", "ref"):
+        raise ValueError(f"unknown quant impl {impl}")
+    return impl
+
+
+def int8_gossip(
+    x: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    impl: str = "auto",
+) -> jax.Array:
+    """One Metropolis gossip step with blockwise-int8-quantized payloads.
+
+    Send side quantizes ``x`` ONCE (Pallas ``quantize_fwd``); each matching
+    then ships (int8 payload, fp32 blockwise scales) = 2 ppermutes, and the
+    receive side folds each arrival into the accumulator with the fused
+    dequant+weighted-accumulate kernel — a single pass over the buffer per
+    matching, no fp32 payload ever materialized.
+
+    ``x`` must be flat with ``len(x) % block == 0`` (the FlatSpec contract).
+    """
+    if len(rel) == 0:
+        return x
+    impl = _resolve_impl(impl)
+    idx = jax.lax.axis_index(axis_name)
+    diag, per_matching = tdm.matching_weight_vectors(rel, n)
+    x32 = x.astype(jnp.float32)
+    if impl == "ref":
+        q, scales = q_ref.quantize_ref(x32, block=block)
+    else:
+        q, scales = q_kernel.quantize_fwd(
+            x32, block=block, interpret=(impl == "pallas_interpret")
+        )
+    acc = jnp.zeros_like(x32)
+    matchings = tdm.edge_coloring(rel)
+    for m, w_m in zip(matchings, per_matching):
+        q_r = tdm.exchange_matching(q, m, axis_name)
+        s_r = tdm.exchange_matching(scales, m, axis_name)
+        w = jnp.asarray(w_m, jnp.float32)[idx]
+        if impl == "ref":
+            acc = q_ref.dequant_acc_ref(q_r, s_r, acc, w, block=block)
+        else:
+            acc = q_kernel.dequant_accumulate_fwd(
+                q_r, s_r, acc, w, block=block,
+                interpret=(impl == "pallas_interpret"),
+            )
+    self_w = jnp.asarray(diag, jnp.float32)[idx]
+    return (self_w * x32 + acc).astype(x.dtype)
+
+
+def fused_buffer_mix(
+    buf: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    cfg,
+    residual: Optional[tdm.ChocoState] = None,
+    *,
+    n_leaves: int = 1,
+    block: int = DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+) -> Tuple[jax.Array, Optional[tdm.ChocoState]]:
+    """One TDM-FLA mixing step for a single fused buffer.
+
+    ``cfg`` is a :class:`repro.core.fl.TDMFLAConfig` (duck-typed to avoid a
+    circular import). ``n_leaves`` scales the top-k budget so fused CHOCO
+    ships the same payload as the per-leaf path would.
+    """
+    if len(rel) == 0:
+        return buf, residual
+    if cfg.compression == "topk":
+        k = min(cfg.topk_k * max(n_leaves, 1), buf.shape[0])
+        state = residual if isinstance(residual, tdm.ChocoState) else tdm.choco_init(buf)
+        return tdm.choco_gossip_round(
+            buf, state, rel, axis_name, n, k, gamma=cfg.choco_gamma
+        )
+    if cfg.compression == "int8":
+        return (
+            int8_gossip(
+                buf, rel, axis_name, n, block=block, impl=quant_impl
+            ),
+            residual,
+        )
+    if cfg.comm == "get1meas":
+        return tdm.gossip_avg_serial(buf, rel, axis_name, n), residual
+    return tdm.gossip_avg(buf, rel, axis_name, n), residual
+
+
+def fused_tdm_fla_round(
+    params: Any,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    cfg,
+    residuals: Any = None,
+    *,
+    block: int = DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+) -> Tuple[Any, Any]:
+    """One TDM-FLA round over a whole pytree through the fused engine.
+
+    Flatten -> mix each dtype bucket's buffer -> unflatten. Residuals (CHOCO
+    state) are keyed by bucket name — an opaque carry; hand back exactly
+    what the previous call returned (or None to reset).
+    """
+    if len(rel) == 0:
+        return params, residuals
+    spec = build_spec(params, block=block)
+    buffers = flatten_pytree(spec, params)
+    res_in = residuals if isinstance(residuals, dict) else {}
+    mixed, res_out = {}, {}
+    for bucket, buf in buffers.items():
+        mixed[bucket], res_out[bucket] = fused_buffer_mix(
+            buf,
+            rel,
+            axis_name,
+            n,
+            cfg,
+            res_in.get(bucket),
+            n_leaves=spec.n_leaves(bucket),
+            block=block,
+            quant_impl=quant_impl,
+        )
+    return unflatten_pytree(spec, mixed), res_out

@@ -184,19 +184,58 @@ def gossip_avg(
     Per-edge weights vary (they depend on both endpoint degrees), so each
     matching carries its own per-node weight vector (static constants).
     """
-    W = metropolis_weights(rel, n)
-    matchings = edge_coloring(rel)
+    diag, per_matching = matching_weight_vectors(rel, n)
     idx = jax.lax.axis_index(axis_name)
-    self_w = jnp.asarray(np.diag(W), dtype=x.dtype)[idx]
-    out = self_w * x
-    for m in matchings:
-        # weight this node applies to the value received via matching m
-        w_m = np.zeros((n,))
-        for (i, j) in m.pairs:
-            w_m[i] = W[i, j]
+    out = jnp.asarray(diag, dtype=x.dtype)[idx] * x
+    for m, w_m in zip(edge_coloring(rel), per_matching):
         recv = exchange_matching(x, m, axis_name)
         out = out + jnp.asarray(w_m, dtype=x.dtype)[idx] * recv
     return out
+
+
+def gossip_avg_serial(
+    x: jax.Array,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+) -> jax.Array:
+    """Metropolis gossip step via the SERIALIZED primitive (``get1_meas``):
+    same algebra as :func:`gossip_avg`, but the matchings chain one after
+    another (single-antenna satellite). Shared by the per-leaf and fused
+    exchange paths so both are bit-identical by construction."""
+    if len(rel) == 0:
+        return x
+    W = metropolis_weights(rel, n)
+    idx = jax.lax.axis_index(axis_name)
+    self_w = jnp.asarray(np.diag(W), dtype=x.dtype)[idx]
+    out = self_w * x
+    peer_data, mask = get1_meas(x, rel, axis_name, n)
+    # weight received values: receiver i applies W[i, peer_p] to its p-th peer
+    max_deg = rel.max_degree()
+    wmat = np.zeros((n, max_deg))
+    for i in range(n):
+        for p, j in enumerate(rel.peers_of(i)):
+            wmat[i, p] = W[i, j]
+    w_row = jnp.asarray(wmat, dtype=x.dtype)[idx]  # (max_deg,)
+    return out + jnp.sum(
+        w_row.reshape((-1,) + (1,) * x.ndim) * peer_data.astype(x.dtype), axis=0
+    )
+
+
+def matching_weight_vectors(rel: Relation, n: int) -> Tuple[np.ndarray, List[np.ndarray]]:
+    """Static Metropolis weight vectors per matching: returns
+    ``(diag, [w_m, ...])`` where ``diag[i]`` is node i's self weight and
+    ``w_m[i]`` the weight node i applies to the value received via matching
+    m (zero when i does not participate in m). Matchings are in
+    :func:`edge_coloring` order — the contract shared by every gossip path."""
+    W = metropolis_weights(rel, n)
+    vecs = []
+    for m in edge_coloring(rel):
+        w_m = np.zeros((n,))
+        for (i, j) in m.pairs:
+            w_m[i] = W[i, j]
+        vecs.append(w_m)
+    return np.diag(W).copy(), vecs
 
 
 def gossip_avg_tree(params, rel: Relation, axis_name: str, n: int):
@@ -288,9 +327,9 @@ def choco_gossip_round(
     payload = compress_lib.topk_compress(x - state.x_hat, k)
     q_dense = compress_lib.topk_decompress(payload, x.shape, x.dtype)
     new_x_hat = state.x_hat + q_dense
-    matchings = edge_coloring(rel)
+    _, per_matching = matching_weight_vectors(rel, n)
     s = state.s
-    for m in matchings:
+    for m, w_m in zip(edge_coloring(rel), per_matching):
         vals = exchange_matching(payload.values, m, axis_name)
         idxs = exchange_matching(payload.indices, m, axis_name)
         contrib = (
@@ -300,9 +339,6 @@ def choco_gossip_round(
             .reshape(x.shape)
         )
         # weight by W[i, peer-under-matching-m]
-        w_m = np.zeros((n,), dtype=np.float32)
-        for (i, j) in m.pairs:
-            w_m[i] = W[i, j]
         s = s + jnp.asarray(w_m, x.dtype)[idx] * contrib.astype(x.dtype)
     deg_w = np.zeros((n,), dtype=np.float32)
     for i in range(n):

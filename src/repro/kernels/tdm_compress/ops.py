@@ -8,20 +8,24 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.tdm_compress.tdm_compress import dequantize_fwd, quantize_fwd
+from repro.kernels.tdm_compress.tdm_compress import (
+    dequant_accumulate_fwd,
+    dequantize_fwd,
+    quantize_fwd,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def quantize_payload(
     x: jax.Array, *, block: int = 1024, interpret: bool = False
 ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
-    """Any-shaped tensor -> (int8 payload, blockwise scales, orig shape)."""
+    """Any-shaped tensor -> (int8 payload, blockwise scales, orig shape).
+
+    Padding to the block boundary happens inside :func:`quantize_fwd`; the
+    returned payload has exactly ``x.size`` entries.
+    """
     shape = x.shape
     flat = x.reshape(-1).astype(jnp.float32)
-    n = flat.shape[0]
-    pad = (-n) % block
-    if pad:
-        flat = jnp.pad(flat, (0, pad))
     q, s = quantize_fwd(flat, block=block, interpret=interpret)
     return q, s, shape
 
@@ -36,3 +40,14 @@ def dequantize_payload(
     for d in shape:
         n *= d
     return x[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequant_accumulate(
+    q: jax.Array, scales: jax.Array, acc: jax.Array, w: jax.Array, *,
+    block: int = 1024, interpret: bool = False,
+) -> jax.Array:
+    """Fused ``acc + w * dequant(q, scales)`` over a flat payload."""
+    return dequant_accumulate_fwd(
+        q, scales, acc, w, block=block, interpret=interpret
+    )

@@ -6,17 +6,36 @@ import jax
 import jax.numpy as jnp
 
 
+def _pad_to_block(x: jax.Array, block: int) -> jax.Array:
+    pad = (-x.shape[0]) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x
+
+
 def quantize_ref(x: jax.Array, block: int = 1024):
-    """x: flat (n,) fp32, n % block == 0 -> (q int8 (n,), scales (n/block,))."""
+    """x: flat (n,) fp32, any n -> (q int8 (n,), scales (ceil(n/block),))."""
     n = x.shape[0]
-    nb = n // block
-    xb = x.reshape(nb, block).astype(jnp.float32)
+    xp = _pad_to_block(x.astype(jnp.float32), block)
+    nb = xp.shape[0] // block
+    xb = xp.reshape(nb, block)
     scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / 127.0
     q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
-    return q.reshape(n), scale
+    return q.reshape(nb * block)[:n], scale
 
 
 def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 1024):
     n = q.shape[0]
-    nb = n // block
-    return (q.reshape(nb, block).astype(jnp.float32) * scale[:, None]).reshape(n)
+    qp = _pad_to_block(q, block)
+    nb = qp.shape[0] // block
+    return (qp.reshape(nb, block).astype(jnp.float32) * scale[:, None]).reshape(
+        nb * block
+    )[:n]
+
+
+def dequant_acc_ref(q: jax.Array, scale: jax.Array, acc: jax.Array, w,
+                    block: int = 1024):
+    """acc + w * dequant(q, scale) — oracle for the fused receive pass."""
+    return acc.astype(jnp.float32) + jnp.asarray(w, jnp.float32) * dequantize_ref(
+        q, scale, block
+    )

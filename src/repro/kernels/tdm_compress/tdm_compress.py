@@ -1,12 +1,22 @@
-"""Pallas TPU kernel: blockwise int8 quantization of TDM payloads.
+"""Pallas TPU kernels: blockwise int8 quantization of TDM payloads, plus the
+fused receive-side dequant + weighted-accumulate pass.
 
 The ISL (ICI) link is the scarce resource in constellation-scale TDM
 exchange (DESIGN.md §3); quantizing gossip payloads to int8 on-chip before
 ``ppermute`` cuts link bytes 4x. One fused pass per block: absmax reduce ->
 scale -> round/clip -> int8 store, blocked to VMEM-sized tiles.
 
+The receive side of the fused exchange engine (:mod:`repro.core.fused`)
+accumulates Metropolis-weighted dequantized payloads, one matching at a
+time: ``acc += w * (q * scale)``. Doing dequant and accumulate in one kernel
+keeps the int8 payload from ever materializing as fp32 in HBM — a single
+pass over the buffer per matching.
+
 Grid (n/block,); tiles (block,) live fully in VMEM (block = 1024 fp32 =
-4 KiB in, 1 KiB out). Scales are written per block (fp32).
+4 KiB in, 1 KiB out). Scales are written per block (fp32). Arbitrary
+lengths are handled by zero-padding up to the next block boundary (zeros
+never raise a block's absmax, and padded lanes are sliced off on the way
+out).
 """
 
 from __future__ import annotations
@@ -22,6 +32,14 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
+def _pad_to_block(x: jax.Array, block: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x
+
+
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                    # (1, block)
     absmax = jnp.max(jnp.abs(x))
@@ -35,11 +53,22 @@ def _dequant_kernel(q_ref, s_ref, x_ref):
     x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[0, 0]
 
 
+def _dequant_acc_kernel(q_ref, s_ref, acc_ref, w_ref, out_ref):
+    out_ref[...] = acc_ref[...] + w_ref[0, 0] * (
+        q_ref[...].astype(jnp.float32) * s_ref[0, 0]
+    )
+
+
 def quantize_fwd(x: jax.Array, *, block: int = 1024, interpret: bool = False):
-    """x: flat (n,) -> (q int8 (n,), scales fp32 (n/block,))."""
+    """x: flat (n,) any length -> (q int8 (n,), scales fp32 (ceil(n/block),)).
+
+    Lengths that are not block multiples are zero-padded internally; the
+    padded tail is sliced off ``q`` (the last scale still reflects only the
+    real entries, since zero padding cannot raise the block absmax).
+    """
     n = x.shape[0]
-    assert n % block == 0, (n, block)
-    nb = n // block
+    x = _pad_to_block(x, block)
+    nb = x.shape[0] // block
     x2 = x.reshape(nb, block)
     q, s = pl.pallas_call(
         _quant_kernel,
@@ -56,13 +85,16 @@ def quantize_fwd(x: jax.Array, *, block: int = 1024, interpret: bool = False):
         interpret=interpret,
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
     )(x2)
-    return q.reshape(n), s.reshape(nb)
+    return q.reshape(nb * block)[:n], s.reshape(nb)
 
 
 def dequantize_fwd(q: jax.Array, scales: jax.Array, *, block: int = 1024,
                    interpret: bool = False):
+    """Inverse of :func:`quantize_fwd`; returns fp32 of q's (unpadded) length."""
     n = q.shape[0]
-    nb = n // block
+    q = _pad_to_block(q, block)
+    nb = q.shape[0] // block
+    assert scales.shape[0] == nb, (scales.shape, nb, block)
     x = pl.pallas_call(
         _dequant_kernel,
         grid=(nb,),
@@ -75,4 +107,42 @@ def dequantize_fwd(q: jax.Array, scales: jax.Array, *, block: int = 1024,
         interpret=interpret,
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
     )(q.reshape(nb, block), scales.reshape(nb, 1))
-    return x.reshape(n)
+    return x.reshape(nb * block)[:n]
+
+
+def dequant_accumulate_fwd(
+    q: jax.Array,
+    scales: jax.Array,
+    acc: jax.Array,
+    w: jax.Array,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+):
+    """Fused receive side: ``acc + w * dequant(q, scales)`` in one pass.
+
+    q: int8 (n,); scales: fp32 (ceil(n/block),); acc: fp32 (n,); w: scalar
+    (the per-node Metropolis weight of the matching this payload arrived
+    on — a traced value inside shard_map). Returns fp32 (n,).
+    """
+    n = q.shape[0]
+    q = _pad_to_block(q, block)
+    acc = _pad_to_block(acc.astype(jnp.float32), block)
+    nb = q.shape[0] // block
+    assert scales.shape[0] == nb, (scales.shape, nb, block)
+    w2 = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _dequant_acc_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+    )(q.reshape(nb, block), scales.reshape(nb, 1), acc.reshape(nb, block), w2)
+    return out.reshape(nb * block)[:n]

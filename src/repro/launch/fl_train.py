@@ -50,20 +50,25 @@ class FLConfig:
     comm: str = "getmeas"           # getmeas | get1meas (paper primitives)
     compression: str = "none"       # none | int8 | topk
     topk_k: int = 64
+    fused: bool = True              # flat-buffer exchange engine (core/fused)
 
 
 def _stack_init(key, cfg: ModelConfig, opt_cfg, n_nodes: int):
-    """Per-node states, stacked on a leading node axis (node i = seed i)."""
-    states = []
-    for i in range(n_nodes):
-        params, _ = registry.bundle(cfg).init(jax.random.fold_in(key, 0))
-        # same init everywhere (consensus start); opt state is per-node
-        states.append({
-            "params": params,
-            "opt": adamw.init_opt_state(params, opt_cfg),
-            "step": jnp.zeros((), jnp.int32),
-        })
-    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    """Per-node states, stacked on a leading node axis.
+
+    Every node starts from the SAME init (consensus start: seed is
+    ``fold_in(key, 0)`` for all of them), so the model/opt state is built
+    once and broadcast — not re-initialized n_nodes times.
+    """
+    params, _ = registry.bundle(cfg).init(jax.random.fold_in(key, 0))
+    state = {
+        "params": params,
+        "opt": adamw.init_opt_state(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_nodes,) + x.shape), state
+    )
 
 
 def build_fl_round(
@@ -80,7 +85,10 @@ def build_fl_round(
     (stacked_state, metrics) function."""
     b = registry.bundle(cfg)
     tdm_cfg = fl.TDMFLAConfig(
-        comm=fl_cfg.comm, compression=fl_cfg.compression, topk_k=fl_cfg.topk_k
+        comm=fl_cfg.comm,
+        compression=fl_cfg.compression,
+        topk_k=fl_cfg.topk_k,
+        fused=fl_cfg.fused,
     )
 
     def node_round(state, batch):
@@ -177,6 +185,7 @@ def run_tdm_rounds(
     batch_fn: Callable[[int], Any],
     alive: Optional[set] = None,
     on_round: Optional[Callable[[RoundLog], None]] = None,
+    log_every: int = 1,
 ):
     """Drive one FL round per slot relation (the time-varying-schedule mode).
 
@@ -184,6 +193,13 @@ def run_tdm_rounds(
     model satellite failures; occluded/dead nodes drop out of the round's
     relation via ``Relation.restrict`` (paper skip-slot semantics) while
     their local training continues. Returns (state, [RoundLog, ...]).
+
+    ``log_every``: compute loss/consensus metrics only every k-th round
+    (always including round 0). ``consensus_distance`` transfers the full
+    stacked parameters to the host — a device sync per round that benchmark
+    and long runs don't want; skipped rounds log NaN metrics and never touch
+    device values, so rounds stay async-dispatchable. ``log_every=0``
+    disables metrics entirely.
     """
     n_nodes = cache.n_nodes
     logs = []
@@ -191,10 +207,13 @@ def run_tdm_rounds(
         live = set(alive) if alive is not None else set(range(n_nodes))
         rel_t = rel.restrict(live)
         state, losses = cache(rel_t)(state, batch_fn(rnd))
+        log_this = log_every > 0 and rnd % log_every == 0
         log = RoundLog(
             round=rnd,
-            loss=float(jnp.mean(losses)),
-            consensus=consensus_distance(state["params"]),
+            loss=float(jnp.mean(losses)) if log_this else float("nan"),
+            consensus=(
+                consensus_distance(state["params"]) if log_this else float("nan")
+            ),
             n_links=len(rel_t) // 2,
             alive=len(live),
         )
@@ -220,6 +239,7 @@ def run_constellation_fl(
     antennas=None,
     payload_bytes: int = 1 << 20,
     acquisition_s: float = 0.0,
+    log_every: int = 1,
 ):
     """Constellation-driven FL: one round per contact-plan time step.
 
@@ -262,7 +282,9 @@ def run_constellation_fl(
         reps = -(-rounds // max(len(relations), 1))
         relations = (relations * reps)[:rounds]
     cache = RoundFnCache(cfg, opt_cfg, mesh, n_nodes, fl_cfg)
-    return run_tdm_rounds(cache, state, relations, batch_fn, alive, on_round)
+    return run_tdm_rounds(
+        cache, state, relations, batch_fn, alive, on_round, log_every=log_every
+    )
 
 
 def consensus_distance(stacked_params) -> float:

@@ -1,0 +1,255 @@
+"""Multi-device worker for the fused flat-buffer exchange engine: HLO-level
+collective counts (M fused vs L×M per-leaf) and fused-vs-per-leaf
+equivalence for every compression mode, on 8 forced host devices. Launched
+as a subprocess by test_fused.py (device count locks at first jax init).
+
+Exit code 0 + final line "ALL-OK" on success.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import functools
+import random
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import fl, fused, tdm
+from repro.core.relation import Relation
+from repro.core.schedule import ring
+from repro.launch.hlo_stats import collective_stats
+
+N = 8
+mesh = Mesh(np.array(jax.devices()[:N]), ("node",))
+
+# L=12 > 10 leaves, mixed shapes, all fp32 (single bucket => exactly M)
+SHAPES = [
+    (3, 5), (17,), (4, 4, 2), (128,), (33,), (2, 2),
+    (64, 3), (7,), (5, 5), (11, 3), (9,), (256,),
+]
+L = len(SHAPES)
+
+
+def make_tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        f"w{i}": jnp.asarray(rng.normal(size=(N,) + s).astype(np.float32))
+        for i, s in enumerate(SHAPES)
+    }
+
+
+def round_fn(rel, cfg, **kw):
+    def body(t):
+        t = jax.tree.map(lambda x: x[0], t)
+        if kw:
+            out, _ = fused.fused_tdm_fla_round(t, rel, "node", N, cfg, **kw)
+        else:
+            out, _ = fl.tdm_fla_round(t, rel, "node", N, cfg)
+        return jax.tree.map(lambda x: x[None], out)
+
+    # check_rep=False: the Pallas quantization kernels have no replication
+    # rule (same reason build_fl_round disables it)
+    return jax.jit(
+        shard_map(
+            body, mesh=mesh, in_specs=(P("node"),), out_specs=P("node"),
+            check_rep=False,
+        )
+    )
+
+
+def permute_count(fn, tree) -> float:
+    stats = collective_stats(fn.lower(tree).compile().as_text())
+    return stats.count_by_kind.get("collective-permute", 0.0)
+
+
+def tree_equal(a, b) -> bool:
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+
+
+def tree_rel_err(a, b) -> float:
+    num = sum(
+        float(np.square(np.asarray(x) - np.asarray(y)).sum())
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b))
+    )
+    den = sum(float(np.square(np.asarray(y)).sum()) for y in jax.tree.leaves(b))
+    return (num / max(den, 1e-30)) ** 0.5
+
+
+def random_relation(rng: random.Random, p: float = 0.5) -> Relation:
+    edges = [(i, j) for i in range(N) for j in range(i + 1, N) if rng.random() < p]
+    return Relation.from_edges(edges, nodes=range(N))
+
+
+def check(name, cond):
+    if not cond:
+        print(f"FAIL: {name}")
+        sys.exit(1)
+    print(f"ok: {name}")
+
+
+# ---------------------------------------------------------------------------
+# 1. HLO collective counts: fused == M, per-leaf == L×M (the tentpole claim)
+# ---------------------------------------------------------------------------
+def test_hlo_collective_counts():
+    tree = make_tree()
+    for rel in (ring(N), Relation.clique(list(range(N)))):
+        M = len(tdm.edge_coloring(rel))
+        got_fused = permute_count(round_fn(rel, fl.TDMFLAConfig(fused=True)), tree)
+        got_leaf = permute_count(round_fn(rel, fl.TDMFLAConfig(fused=False)), tree)
+        assert got_fused == M, (got_fused, M)
+        assert got_leaf == L * M, (got_leaf, L, M)
+        # int8 ships payload + scales per matching: exactly 2M, still no L
+        got_int8 = permute_count(
+            round_fn(rel, fl.TDMFLAConfig(compression="int8", fused=True)), tree
+        )
+        assert got_int8 == 2 * M, (got_int8, M)
+    check(f"HLO: fused round = M permutes, per-leaf = {L}xM, int8 fused = 2M", True)
+
+
+# ---------------------------------------------------------------------------
+# 2. uncompressed fused == per-leaf, bit for bit (both primitives)
+# ---------------------------------------------------------------------------
+def test_uncompressed_bitwise():
+    rng = random.Random(0)
+    for case in range(8):
+        rel = random_relation(rng)
+        if len(rel) == 0:
+            continue
+        tree = make_tree(seed=case)
+        for comm in ("getmeas", "get1meas"):
+            a = round_fn(rel, fl.TDMFLAConfig(comm=comm, fused=True))(tree)
+            b = round_fn(rel, fl.TDMFLAConfig(comm=comm, fused=False))(tree)
+            assert tree_equal(a, b), (case, comm)
+    check("uncompressed fused == per-leaf bitwise (getmeas + get1meas)", True)
+
+
+# ---------------------------------------------------------------------------
+# 3. int8: fused (blockwise, Metropolis) tracks exact gossip and the per-leaf
+#    path within quantization tolerance; Pallas-interpret == jnp ref impl
+# ---------------------------------------------------------------------------
+def test_int8_tolerance():
+    tree = make_tree(seed=3)
+    rel = Relation.clique(list(range(N)))  # regular: per-leaf weights == Metropolis
+    exact = round_fn(rel, fl.TDMFLAConfig(fused=True))(tree)
+    got = round_fn(rel, fl.TDMFLAConfig(compression="int8", fused=True))(tree)
+    err_exact = tree_rel_err(got, exact)
+    assert err_exact < 0.02, err_exact
+    per_leaf = round_fn(rel, fl.TDMFLAConfig(compression="int8", fused=False))(tree)
+    err_leaf = tree_rel_err(got, per_leaf)
+    assert err_leaf < 0.04, err_leaf
+    check(
+        f"int8 fused: vs exact gossip {err_exact:.4f} < 2%, "
+        f"vs per-leaf int8 {err_leaf:.4f} < 4%",
+        True,
+    )
+
+
+def test_int8_pallas_matches_ref_impl():
+    tree = make_tree(seed=4)
+    rel = ring(N)
+    cfg = fl.TDMFLAConfig(compression="int8")
+    a = round_fn(rel, cfg, quant_impl="pallas_interpret")(tree)
+    b = round_fn(rel, cfg, quant_impl="ref")(tree)
+    err = tree_rel_err(a, b)
+    assert err < 1e-6, err
+    check("int8 fused: Pallas(interpret) impl == jnp ref impl", True)
+
+
+# ---------------------------------------------------------------------------
+# 4. CHOCO top-k on the fused buffer converges to consensus (state carried
+#    across rounds, k budget = topk_k × n_leaves)
+# ---------------------------------------------------------------------------
+def test_choco_fused_converges():
+    # k = 16 x 12 leaves = 192 of 751 live entries (~25% density, same
+    # regime as the per-leaf CHOCO test); gamma shrinks with density
+    cfg = fl.TDMFLAConfig(compression="topk", topk_k=16, choco_gamma=0.3)
+    rng = random.Random(5)
+    rel = random_relation(rng, p=0.9)
+    tree = make_tree(seed=5)
+
+    def rounds(t):
+        t = jax.tree.map(lambda x: x[0], t)
+        res = None
+        for _ in range(80):
+            t, res = fused.fused_tdm_fla_round(t, rel, "node", N, cfg, res)
+        return jax.tree.map(lambda x: x[None], t)
+
+    f = jax.jit(
+        shard_map(
+            rounds, mesh=mesh, in_specs=(P("node"),), out_specs=P("node"),
+            check_rep=False,
+        )
+    )
+    got = f(tree)
+    errs = []
+    for k in tree:
+        arr = np.asarray(got[k]).reshape(N, -1)
+        target = np.asarray(tree[k]).reshape(N, -1).mean(0)
+        errs.append(np.linalg.norm(arr - target) / max(np.linalg.norm(target), 1e-9))
+    worst = max(errs)
+    assert worst < 0.05, worst
+    check(f"CHOCO top-k fused consensus err {worst:.4f} < 5%", True)
+
+
+# ---------------------------------------------------------------------------
+# 5. end-to-end: build_fl_round(fused) == build_fl_round(per-leaf) bit for
+#    bit on a real smoke model (19 leaves), through the full training round
+# ---------------------------------------------------------------------------
+def test_build_fl_round_end_to_end():
+    from repro.configs import archs
+    from repro.data import pipeline
+    from repro.launch import fl_train
+    from repro.models.config import ShapeConfig
+    from repro.optim import adamw
+
+    cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
+    opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
+    shape = ShapeConfig("fl", "train", 32, 2)
+    fl_mesh = jax.make_mesh((N,), ("data",))
+    rel = ring(N)
+
+    def batch_fn():
+        per_node = []
+        for sat in range(N):
+            b = pipeline.host_batch(cfg, shape, step=0, seed=100 + sat)
+            per_node.append({k: v[None] for k, v in b.items()})
+        return {k: np.stack([pn[k] for pn in per_node]) for k in per_node[0]}
+
+    batch = batch_fn()
+    outs = {}
+    for fused_flag in (True, False):
+        fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=1, fused=fused_flag)
+        state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, N)
+        step = fl_train.build_fl_round(cfg, opt_cfg, fl_mesh, N, fl_cfg, rel)
+        outs[fused_flag] = step(state, batch)
+    s_f, loss_f = outs[True]
+    s_l, loss_l = outs[False]
+    assert np.array_equal(np.asarray(loss_f), np.asarray(loss_l))
+    assert tree_equal(s_f["params"], s_l["params"])
+    check(
+        f"build_fl_round fused == per-leaf bit-for-bit on mamba2 smoke "
+        f"(loss {float(np.mean(np.asarray(loss_f))):.3f})",
+        True,
+    )
+
+
+if __name__ == "__main__":
+    test_hlo_collective_counts()
+    test_uncompressed_bitwise()
+    test_int8_tolerance()
+    test_int8_pallas_matches_ref_impl()
+    test_choco_fused_converges()
+    test_build_fl_round_end_to_end()
+    print("ALL-OK")

@@ -1,0 +1,103 @@
+"""Fused flat-buffer exchange engine: single-device spec/layout tests plus
+the launcher for the multi-device HLO-count / equivalence worker
+(_fused_worker.py — subprocess, 8 forced host devices)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fl, fused
+from repro.core.relation import Relation
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def mixed_tree():
+    rng = np.random.default_rng(0)
+    return {
+        "a": jnp.asarray(rng.normal(size=(3, 5)).astype(np.float32)),
+        "b": {
+            "c": jnp.asarray(rng.normal(size=(17,)).astype(np.float32)),
+            "d": jnp.asarray(rng.normal(size=(4, 2)).astype(np.float16)),
+        },
+        "e": jnp.asarray(rng.integers(0, 9, size=(6,)).astype(np.int32)),
+        "f": jnp.asarray(np.float32(2.5)),  # scalar leaf
+    }
+
+
+def test_spec_buckets_and_padding():
+    tree = mixed_tree()
+    spec = fused.build_spec(tree, block=64)
+    assert spec.buckets == ["float16", "float32", "int32"]
+    # fp32: 15 + 17 + 1 = 33 elements -> padded to 64
+    assert spec.padded_size("float32") == 64
+    assert spec.n_leaves("float32") == 3
+    assert spec.padded_size("float16") == 64
+    assert spec.padded_size("int32") == 64
+    # every padded size is a block multiple
+    for b in spec.buckets:
+        assert spec.padded_size(b) % 64 == 0
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = mixed_tree()
+    spec = fused.build_spec(tree, block=64)
+    bufs = fused.flatten_pytree(spec, tree)
+    assert set(bufs) == set(spec.buckets)
+    for b, buf in bufs.items():
+        assert buf.shape == (spec.padded_size(b),)
+        assert buf.dtype == jnp.dtype(b)
+    back = fused.unflatten_pytree(spec, bufs)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_flatten_rejects_wrong_tree():
+    tree = mixed_tree()
+    spec = fused.build_spec(tree, block=64)
+    with pytest.raises(ValueError, match="tree mismatch"):
+        fused.flatten_pytree(spec, {"zz": tree["a"]})
+
+
+def test_empty_relation_passthrough():
+    tree = mixed_tree()
+    out, res = fused.fused_tdm_fla_round(
+        tree, Relation.empty(range(4)), "node", 4, fl.TDMFLAConfig()
+    )
+    assert out is tree and res is None
+
+
+def test_fused_is_default():
+    assert fl.TDMFLAConfig().fused
+    from repro.launch.fl_train import FLConfig
+
+    assert FLConfig().fused
+
+
+def test_bad_quant_impl_raises():
+    with pytest.raises(ValueError, match="unknown quant impl"):
+        fused._resolve_impl("metal")
+
+
+@pytest.mark.slow
+def test_fused_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT / 'tests'}:" + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_fused_worker.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, "worker failed"
+    assert "ALL-OK" in proc.stdout

@@ -240,3 +240,35 @@ def test_quant_padding_roundtrip(shape):
     back = q_ops.dequantize_payload(qq, ss, tuple(shape), block=64, interpret=True)
     assert back.shape == tuple(shape)
     assert np.max(np.abs(np.asarray(back) - np.asarray(x))) < 0.05
+
+
+@pytest.mark.parametrize("n,block", [(100, 64), (1, 256), (1023, 1024), (1025, 1024)])
+def test_quant_kernel_arbitrary_length(n, block):
+    """quantize_fwd/dequantize_fwd pad internally: any flat length works and
+    matches the blockwise ref, payload comes back exactly n entries long."""
+    from repro.kernels.tdm_compress.tdm_compress import dequantize_fwd, quantize_fwd
+
+    x = jax.random.normal(jax.random.PRNGKey(n), (n,), jnp.float32) * 2.0
+    q, s = quantize_fwd(x, block=block, interpret=True)
+    q_want, s_want = q_ref.quantize_ref(x, block=block)
+    assert q.shape == (n,)
+    assert s.shape == (-(-n // block),)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_want))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_want), rtol=1e-6)
+    back = dequantize_fwd(q, s, block=block, interpret=True)
+    back_ref = q_ref.dequantize_ref(q_want, s_want, block=block)
+    assert back.shape == (n,)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(back_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,block,w", [(512, 256, 0.25), (1000, 256, 1.0), (77, 64, -0.5)])
+def test_dequant_accumulate_matches_ref(n, block, w):
+    """Fused receive-side pass acc + w * dequant(q, s) == oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(n), 2)
+    x = jax.random.normal(ks[0], (n,), jnp.float32) * 3.0
+    acc = jax.random.normal(ks[1], (n,), jnp.float32)
+    q, s = q_ref.quantize_ref(x, block=block)
+    got = q_ops.dequant_accumulate(q, s, acc, w, block=block, interpret=True)
+    want = q_ref.dequant_acc_ref(q, s, acc, w, block=block)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
