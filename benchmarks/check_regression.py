@@ -1,0 +1,144 @@
+"""BENCH-json trending: compare a benchmark run against a committed
+baseline and fail on regression.
+
+The nightly workflow runs each benchmark with ``--out run.json`` and then::
+
+  python -m benchmarks.check_regression \\
+      --run bench-fused.json \\
+      --baseline benchmarks/baselines/fused_exchange.json
+
+Rows are matched by their IDENTITY fields (every non-float scalar not
+named in ``--metrics``: bench name, model, relation, mode, engine, shell
+shape, ...). For each matched row, each metric present in both sides is
+compared lower-is-better; a run value more than ``--threshold`` (default
+20%) above the baseline fails the job. A baseline row with no matching run
+row also fails — silently dropping a swept cell is how perf regressions
+hide. Improvements beyond the threshold are reported (refresh the baseline
+to bank them) but never fail.
+
+Default metrics are the DETERMINISTIC ones (collective counts/bytes and
+the analytic cost-oracle estimates) so shared CI runners can't flake the
+job; add ``wall_ms`` via ``--metrics`` when the runner is dedicated
+hardware.
+
+To (re)generate a baseline, run the benchmark with the same flags CI uses
+and commit its ``--out`` file under ``benchmarks/baselines/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_METRICS = (
+    "permutes",
+    "collective_bytes",
+    "est_mbytes_isl",
+    "permutes_perleaf",
+    "permutes_fused",
+)
+
+
+def row_key(row: Dict, metrics) -> Tuple:
+    """Identity of a BENCH row: its non-float scalar fields (bench name,
+    labels, sweep coordinates) minus anything being compared as a metric."""
+    return tuple(
+        sorted(
+            (k, v)
+            for k, v in row.items()
+            if k not in metrics
+            and isinstance(v, (str, int, bool))
+            and not isinstance(v, float)
+        )
+    )
+
+
+def load_rows(path: str) -> List[Dict]:
+    rows = json.loads(pathlib.Path(path).read_text())
+    if not isinstance(rows, list):
+        raise SystemExit(f"{path}: expected a json list of BENCH rows")
+    return rows
+
+
+def compare(
+    baseline: List[Dict],
+    run: List[Dict],
+    metrics,
+    threshold: float,
+):
+    """Returns (failures, improvements, checked) as printable strings."""
+    run_by_key: Dict[Tuple, Dict] = {}
+    for row in run:
+        run_by_key[row_key(row, metrics)] = row
+    failures: List[str] = []
+    improvements: List[str] = []
+    checked = 0
+    for base in baseline:
+        relevant = [m for m in metrics if m in base]
+        if not relevant:
+            continue
+        key = row_key(base, metrics)
+        label = " ".join(f"{k}={v}" for k, v in key if k != "bench")
+        bench = dict(key).get("bench", "?")
+        got = run_by_key.get(key)
+        if got is None:
+            failures.append(f"[{bench}] {label}: row missing from run")
+            continue
+        for m in relevant:
+            if m not in got:
+                failures.append(f"[{bench}] {label}: metric {m} missing")
+                continue
+            b, r = float(base[m]), float(got[m])
+            checked += 1
+            if b <= 0:
+                continue
+            ratio = r / b
+            if ratio > 1.0 + threshold:
+                failures.append(
+                    f"[{bench}] {label}: {m} regressed "
+                    f"{b:.6g} -> {r:.6g} (+{(ratio - 1) * 100:.1f}%)"
+                )
+            elif ratio < 1.0 - threshold:
+                improvements.append(
+                    f"[{bench}] {label}: {m} improved "
+                    f"{b:.6g} -> {r:.6g} ({(ratio - 1) * 100:.1f}%) — "
+                    "consider refreshing the baseline"
+                )
+    return failures, improvements, checked
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--run", required=True, help="this run's --out json")
+    p.add_argument("--baseline", required=True, help="committed baseline json")
+    p.add_argument(
+        "--metrics",
+        default=",".join(DEFAULT_METRICS),
+        help="comma-separated lower-is-better metrics to compare",
+    )
+    p.add_argument("--threshold", type=float, default=0.20,
+                   help="fractional regression that fails (default 0.20)")
+    args = p.parse_args(argv)
+    metrics = tuple(m.strip() for m in args.metrics.split(",") if m.strip())
+
+    failures, improvements, checked = compare(
+        load_rows(args.baseline), load_rows(args.run), metrics, args.threshold
+    )
+    for line in improvements:
+        print(f"IMPROVED  {line}")
+    for line in failures:
+        print(f"REGRESSED {line}")
+    print(
+        f"\nchecked {checked} metric cells against "
+        f"{pathlib.Path(args.baseline).name}: "
+        f"{len(failures)} regression(s), {len(improvements)} improvement(s) "
+        f"beyond ±{args.threshold * 100:.0f}%"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,9 @@
 """Fused vs per-leaf TDM exchange: collective counts (HLO-verified) and
-per-round wall time, swept over model size × relation degree.
+per-round wall time, swept over model size × relation degree — on BOTH
+synthetic leaf-count sweeps and real model registries
+(``models/registry.py`` smoke variants: true leaf structures, mixed shapes,
+scan-stacked layers), so the L×M claim is demonstrated on the trees the FL
+drivers actually exchange.
 
 The structural claim (core/fused.py): a per-leaf round issues L×M
 collective-permutes for an L-leaf model over an M-matching relation (2M per
@@ -43,16 +47,49 @@ from repro.launch.hlo_stats import collective_stats
 N = 8
 
 
-def make_tree(n_leaves: int, leaf_elems: int, seed: int = 0):
+def make_tree(n_leaves: int, leaf_elems: int, seed: int = 0, n: int = N):
     """Synthetic L-leaf model, stacked on the node axis. Shapes are jittered
-    (+leaf index) so no two leaves are identical arrays XLA could CSE."""
+    (+leaf index) so no two leaves are identical arrays XLA could CSE.
+    (Also the payload generator for benchmarks/groundseg_round_time.py.)"""
     rng = np.random.default_rng(seed)
     return {
         f"w{i:03d}": jnp.asarray(
-            rng.normal(size=(N, leaf_elems + i)).astype(np.float32)
+            rng.normal(size=(n, leaf_elems + i)).astype(np.float32)
         )
         for i in range(n_leaves)
     }
+
+
+def make_registry_tree(arch_name: str):
+    """A REAL model's parameter pytree (smoke-sized registry variant),
+    stacked on the node axis — the exact tree ``launch/fl_train`` ships
+    through the exchange engine."""
+    from repro.configs import archs
+    from repro.models import registry
+
+    cfg = archs.smoke_cfg(archs.get(arch_name))
+    params, _ = registry.bundle(cfg).init(jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (N,) + x.shape), params
+    )
+
+
+def model_cells(names):
+    """(label, tree, n_leaves, elems_per_node) for synthetic specs
+    ``(n_leaves, leaf_elems)`` and registry arch-name strings alike."""
+    cells = []
+    for spec in names:
+        if isinstance(spec, str):
+            tree = make_registry_tree(spec)
+            label = spec
+        else:
+            n_leaves, leaf_elems = spec
+            tree = make_tree(n_leaves, leaf_elems)
+            label = f"synth-L{n_leaves}"
+        leaves = jax.tree.leaves(tree)
+        elems = sum(int(np.prod(l.shape[1:])) for l in leaves)
+        cells.append((label, tree, len(leaves), elems))
+    return cells
 
 
 def relations():
@@ -105,17 +142,20 @@ def main(argv=None):
     args = p.parse_args(argv)
 
     if args.smoke:
-        models = [(12, 1 << 10)]
+        models = [(12, 1 << 10), "mamba2-780m"]
         rel_names = ["ring", "clique"]
         modes = ["none", "int8"]
         reps = args.reps or 3
     elif args.full:
-        models = [(12, 1 << 10), (48, 1 << 12), (96, 1 << 14)]
+        models = [
+            (12, 1 << 10), (48, 1 << 12), (96, 1 << 14),
+            "mamba2-780m", "gemma2-9b", "qwen3-moe-30b-a3b",
+        ]
         rel_names = ["ring", "circ4", "clique"]
         modes = ["none", "int8", "topk"]
         reps = args.reps or 10
     else:
-        models = [(12, 1 << 10), (48, 1 << 12)]
+        models = [(12, 1 << 10), (48, 1 << 12), "mamba2-780m", "gemma2-9b"]
         rel_names = ["ring", "clique"]
         modes = ["none", "int8"]
         reps = args.reps or 5
@@ -124,11 +164,10 @@ def main(argv=None):
     rels = relations()
     rows = []
     print(
-        f"{'model':<12} {'rel':<7} {'mode':<5} {'engine':<8} "
+        f"{'model':<16} {'rel':<7} {'mode':<5} {'engine':<8} "
         f"{'permutes':>8} {'coll MB':>8} {'wall ms':>9}"
     )
-    for n_leaves, leaf_elems in models:
-        tree = make_tree(n_leaves, leaf_elems)
+    for label, tree, n_leaves, elems in model_cells(models):
         for rel_name in rel_names:
             rel = rels[rel_name]
             n_matchings = len(tdm.edge_coloring(rel))
@@ -143,8 +182,9 @@ def main(argv=None):
                     permutes = stats.count_by_kind.get("collective-permute", 0)
                     row = dict(
                         bench="fused_exchange",
+                        model=label,
                         n_leaves=n_leaves,
-                        leaf_elems=leaf_elems,
+                        elems=elems,
                         relation=rel_name,
                         n_matchings=n_matchings,
                         mode=mode,
@@ -156,7 +196,7 @@ def main(argv=None):
                     rows.append(row)
                     cell[engine] = row
                     print(
-                        f"L={n_leaves:<4}x{leaf_elems:<5} {rel_name:<7} "
+                        f"{label:<16} {rel_name:<7} "
                         f"{mode:<5} {engine:<8} {permutes:>8.0f} "
                         f"{stats.total_bytes/2**20:>8.2f} {wall*1e3:>9.2f}"
                     )
@@ -166,8 +206,9 @@ def main(argv=None):
                 )
                 summary = dict(
                     bench="fused_exchange_summary",
+                    model=label,
                     n_leaves=n_leaves,
-                    leaf_elems=leaf_elems,
+                    elems=elems,
                     relation=rel_name,
                     mode=mode,
                     n_matchings=n_matchings,
@@ -187,8 +228,9 @@ def main(argv=None):
     )
     print(
         f"\nbest fused speedup: {best['speedup']:.2f}x "
-        f"(L={best['n_leaves']}, {best['relation']}, mode={best['mode']}; "
-        f"permutes {best['permutes_perleaf']:.0f} -> {best['permutes_fused']:.0f})"
+        f"({best['model']} L={best['n_leaves']}, {best['relation']}, "
+        f"mode={best['mode']}; permutes {best['permutes_perleaf']:.0f} -> "
+        f"{best['permutes_fused']:.0f})"
     )
     if args.out:
         out_path = pathlib.Path(args.out)

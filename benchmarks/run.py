@@ -9,6 +9,8 @@ the framework's own perf tables.
   tdm         collective bytes/ops of the TDM primitives (subprocess: 8 devs)
   fused       fused vs per-leaf exchange engine: M vs L×M collectives + wall
               time (subprocess: 8 devs)
+  groundseg   ground-segment FL: centralized/hierarchical sink rounds vs
+              gossip — cost oracle + measured exchange (subprocess: 8 devs)
   roofline    the 40-cell dry-run roofline table (reads experiments/dryrun)
 
 ``python -m benchmarks.run``            runs everything quick
@@ -84,6 +86,14 @@ def main(argv=None):
         _banner("fused: flat-buffer exchange engine vs per-leaf (8 devices)")
         _subprocess_bench(
             "benchmarks.fused_exchange",
+            ["--full"] if args.full else ["--smoke"],
+            timeout=3600,
+        )
+
+    if want("groundseg"):
+        _banner("groundseg: sink-based FL vs gossip over the same schedule")
+        _subprocess_bench(
+            "benchmarks.groundseg_round_time",
             ["--full"] if args.full else ["--smoke"],
             timeout=3600,
         )

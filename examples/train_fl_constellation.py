@@ -1,22 +1,26 @@
-"""End-to-end driver: decentralized FL over a constellation's geometry-
-derived time-varying ISL visibility — the paper's motivating deployment.
+"""End-to-end driver: FL over a constellation's geometry-derived
+time-varying ISL visibility — the paper's motivating deployment.
 
-8 MEO satellites (= 8 forced host devices) in a 2-plane Walker pattern,
-each training a reduced LM on its OWN data shard; communication happens
-ONLY through the paper's universal TDM algorithm (getMeas -> matchings ->
-ppermute). The topology is NOT invented: orbits are propagated, links
-require line of sight past the Earth's limb and a 14 000 km range gate,
-and each contact-plan time step's visibility relation is the slot relation.
-Every round:
+Two modes (``--mode``):
 
-    local SGD steps  ->  TDM exchange over the slot's visibility relation
+- ``tdm`` (default) — decentralized FL: 8 MEO satellites (= 8 forced host
+  devices) in a 2-plane Walker pattern, each training a reduced LM on its
+  OWN data shard; communication happens ONLY through the paper's universal
+  TDM algorithm (getMeas -> matchings -> ppermute) over each contact-plan
+  step's visibility relation. Mid-run a satellite failure restricts the
+  slot relations (paper skip-slot semantics) and training continues.
+- ``groundseg`` — the paper's *centralized* generic FLA over the ground
+  segment: 6 satellites + 2 ground stations. Satellite updates ride
+  store-and-forward multi-hop ISL relays to the ground sinks along
+  earliest-delivery contact-graph routes, the sinks FedAvg (hierarchical:
+  regional models, pooled over terrestrial backhaul every other round),
+  and the global model floods back on the downlink slots.
 
-The script prints the contact windows the geometry produced, reports loss
-and consensus distance per round, then simulates a satellite failure: the
-slot relations are restricted (paper skip-slot semantics) and training
-continues with the survivors.
+The topology is NOT invented: orbits are propagated, ISLs require line of
+sight past the Earth's limb and a range gate, ground links an elevation
+mask, and the slot relations come straight from the contact plan.
 
-Run:  PYTHONPATH=src python examples/train_fl_constellation.py
+Run:  PYTHONPATH=src python examples/train_fl_constellation.py [--mode groundseg]
 """
 
 import os
@@ -24,6 +28,8 @@ import os
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
 )
+
+import argparse
 
 import jax
 import numpy as np
@@ -36,48 +42,34 @@ from repro.models.config import ShapeConfig
 from repro.optim import adamw
 
 
-N_SATS = 8
 ROUNDS = 10
 LOCAL_STEPS = 2
 PAYLOAD_BYTES = 1 << 22     # ~4 MiB of smoke-model params per exchange
 
 
-def main():
+def setup(n_sats: int, ground_stations=()):
     cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
     opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
-    fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
-    shape = ShapeConfig("fl", "train", 32, 4)   # per-sat batch of 4 rows
+    shape = ShapeConfig("fl", "train", 32, 4)   # per-node batch of 4 rows
 
     # --- geometry: O3b-style MEO shell, visibility from orbital mechanics
     geom = orbits.WalkerDelta(
-        total=N_SATS, planes=2, altitude_km=8062.0, inclination_deg=60.0
+        total=n_sats, planes=2, altitude_km=8062.0, inclination_deg=60.0
     )
     plan = contact_plan.build_contact_plan(
         geom,
         duration_s=geom.period_s,
         step_s=geom.period_s / ROUNDS,
         max_range_km=14_000.0,
+        ground_stations=ground_stations,
     )
-    windows = plan.windows()
-    est = cost.plan_cost(plan, PAYLOAD_BYTES, mode="getmeas")
-    print(
-        f"{N_SATS} satellites, Walker delta {geom.planes}-plane @ "
-        f"{geom.altitude_km:.0f} km (period {geom.period_s/60:.0f} min): "
-        f"{len(windows)} contact windows, est. comm "
-        f"{est.time_s:.2f} s / {est.bytes_on_isl/1e9:.2f} GB per orbit"
-    )
-    for w in windows[:4]:
-        print(
-            f"  contact {w.i}<->{w.j}  [{w.t_start_s/60.0:5.1f}, "
-            f"{w.t_end_s/60.0:5.1f}] min  {w.mean_rate_bps/1e6:.0f} Mb/s"
-        )
+    return cfg, opt_cfg, shape, geom, plan
 
-    mesh = jax.make_mesh((N_SATS,), ("data",))
-    state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, N_SATS)
 
+def make_batch_fn(cfg, shape, n_nodes):
     def batch_fn(round_idx):
         per_node = []
-        for sat in range(N_SATS):
+        for sat in range(n_nodes):
             bs = [
                 pipeline.host_batch(cfg, shape, step=round_idx * LOCAL_STEPS + h,
                                     seed=1000 + sat)
@@ -90,7 +82,30 @@ def main():
             k: np.stack([pn[k] for pn in per_node]) for k in per_node[0]
         }
 
-    alive = set(range(N_SATS))
+    return batch_fn
+
+
+def main_tdm():
+    n_sats = 8
+    cfg, opt_cfg, shape, geom, plan = setup(n_sats)
+    fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
+    windows = plan.windows()
+    est = cost.plan_cost(plan, PAYLOAD_BYTES, mode="getmeas")
+    print(
+        f"{n_sats} satellites, Walker delta {geom.planes}-plane @ "
+        f"{geom.altitude_km:.0f} km (period {geom.period_s/60:.0f} min): "
+        f"{len(windows)} contact windows, est. comm "
+        f"{est.time_s:.2f} s / {est.bytes_on_isl/1e9:.2f} GB per orbit"
+    )
+    for w in windows[:4]:
+        print(
+            f"  contact {w.i}<->{w.j}  [{w.t_start_s/60.0:5.1f}, "
+            f"{w.t_end_s/60.0:5.1f}] min  {w.mean_rate_bps/1e6:.0f} Mb/s"
+        )
+
+    mesh = jax.make_mesh((n_sats,), ("data",))
+    state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, n_sats)
+    alive = set(range(n_sats))
 
     def on_round(log):
         print(f"round {log.round:2d}  mean-loss {log.loss:7.4f}  "
@@ -100,11 +115,76 @@ def main():
             print("  !! satellite 3 lost — rescheduling (skip-slot semantics)")
 
     state, _ = fl_train.run_constellation_fl(
-        cfg, opt_cfg, mesh, N_SATS, fl_cfg, plan, state, batch_fn,
+        cfg, opt_cfg, mesh, n_sats, fl_cfg, plan, state,
+        make_batch_fn(cfg, shape, n_sats),
         rounds=ROUNDS, alive=alive, on_round=on_round,
     )
     print("done — surviving satellites converged together "
           f"(consensus {fl_train.consensus_distance(state['params']):.4f})")
+
+
+def main_groundseg():
+    n_sats = 6
+    ground = [
+        orbits.GroundStation(0.0, 0.0, name="equator"),
+        orbits.GroundStation(45.0, 120.0, name="midlat"),
+    ]
+    cfg, opt_cfg, shape, geom, plan = setup(n_sats, ground)
+    n_nodes = plan.n_nodes
+    sinks = frozenset(range(n_sats, n_nodes))
+    fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
+    gs_cfg = fl_train.GroundSegConfig(mode="hierarchical", sink_sync_every=2)
+
+    est = cost.groundseg_mode_costs(plan, sinks, PAYLOAD_BYTES, antennas=2)
+    print(
+        f"{n_sats} satellites + {len(ground)} ground sinks, Walker delta "
+        f"{geom.planes}-plane @ {geom.altitude_km:.0f} km:"
+    )
+    for mode in ("centralized", "gossip_getmeas"):
+        rc = est[mode]
+        print(
+            f"  {mode:<16} est round {rc.time_s:9.1f} s, "
+            f"{rc.bytes_on_isl/1e9:.2f} GB on ISL"
+        )
+
+    mesh = jax.make_mesh((n_nodes,), ("data",))
+    state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, n_nodes)
+    alive = set(range(n_nodes))
+
+    def on_round(log):
+        print(
+            f"round {log.round:2d}  sat-loss {log.loss:7.4f}  "
+            f"consensus-dist {log.consensus:.4f}  "
+            f"delivered {log.delivered}/{log.alive}  "
+            f"covered {log.covered}  "
+            f"{'pooled' if log.pooled else 'regional'}"
+        )
+        if log.round == 6:
+            alive.discard(2)
+            print("  !! satellite 2 lost — rerouting (skip-slot semantics)")
+
+    state, _ = fl_train.run_groundseg_fl(
+        cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, plan, state,
+        make_batch_fn(cfg, shape, n_nodes),
+        sinks=sinks, rounds=ROUNDS, alive=alive, on_round=on_round,
+        antennas=2, payload_bytes=PAYLOAD_BYTES,
+    )
+    survivors = [v for v in range(n_sats) if v in alive]
+    sat_params = jax.tree.map(
+        lambda x: np.asarray(x)[survivors], state["params"]
+    )
+    print("done — surviving satellites aggregated through the ground segment "
+          f"(consensus {fl_train.consensus_distance(sat_params):.4f})")
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--mode", choices=("tdm", "groundseg"), default="tdm")
+    args = p.parse_args()
+    if args.mode == "groundseg":
+        main_groundseg()
+    else:
+        main_tdm()
 
 
 if __name__ == "__main__":

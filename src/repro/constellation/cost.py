@@ -169,6 +169,114 @@ def schedule_cost(
     return total
 
 
+# ---------------------------------------------------------------------------
+# Ground-segment (centralized FL) oracle — centralized vs decentralized
+# ---------------------------------------------------------------------------
+
+def _program_cost(
+    sched: ContactSchedule, slot_sends, payload_bytes: int
+) -> RoundCost:
+    """Time/traffic of one store-and-forward program over a schedule window:
+    the wall clock runs from the window start to the end of the last slot
+    that carries a relay transfer; every directed hop ships ONE payload
+    (relay, not exchange — half a gossip edge's traffic)."""
+    used = [t for t, sends in enumerate(slot_sends) if sends]
+    n_hops = sum(len(sends) for sends in slot_sends)
+    if not used:
+        return RoundCost(0.0, 0, 0, 0.0)
+    last = sched.slots[used[-1]]
+    origin = sched.slots[0].start_s
+    return RoundCost(
+        time_s=last.start_s + last.duration_s - origin,
+        bytes_on_isl=payload_bytes * n_hops,
+        n_slots=len(used),
+        max_slot_s=max(sched.slots[t].duration_s for t in used),
+    )
+
+
+def groundseg_round_cost(
+    sched: ContactSchedule,
+    uplink,
+    downlink,
+    payload_bytes: int,
+) -> RoundCost:
+    """One centralized/hierarchical FL round over the ground segment:
+    uplink relay over one schedule window plus downlink broadcast over the
+    next identical window (orbits are periodic when the plan horizon is one
+    period; inter-sink pooling rides terrestrial backhaul and is free in
+    ISL terms, so centralized and hierarchical cost the same here).
+
+    ``uplink``/``downlink`` are the static programs from
+    :mod:`repro.groundseg.routing` built on this schedule's slots.
+    """
+    return _program_cost(sched, uplink.slot_sends, payload_bytes) + _program_cost(
+        sched, downlink.slot_sends, payload_bytes
+    )
+
+
+def groundseg_schedule_cost(
+    sched: ContactSchedule,
+    sinks: Iterable[int],
+    payload_bytes: int,
+    n_nodes: Optional[int] = None,
+) -> RoundCost:
+    """Convenience oracle: route over ``sched`` and price the round — what
+    the schedule optimizer minimizes under ``objective="groundseg"``."""
+    from repro.groundseg import routing  # lazy: groundseg imports this pkg
+
+    sinks = sorted(int(s) for s in sinks)
+    if n_nodes is None:
+        n_nodes = max(
+            [max(s.relation.participants(), default=0) for s in sched.slots]
+            + [max(sinks, default=0)]
+        ) + 1
+    rels = list(sched.tdm)
+    table = routing.earliest_delivery_routes(rels, n_nodes, sinks)
+    up = routing.build_relay_program(rels, n_nodes, sinks, table=table)
+    down = routing.build_broadcast_program(rels, n_nodes, sinks)
+    return groundseg_round_cost(sched, up, down, payload_bytes)
+
+
+def groundseg_mode_costs(
+    plan: ContactPlan,
+    sinks: Iterable[int],
+    payload_bytes: int,
+    antennas=None,
+    acquisition_s: float = 0.0,
+    optimize: Optional[str] = None,
+) -> Dict[str, RoundCost]:
+    """The centralized-vs-decentralized scoreboard for one plan window:
+
+    - ``centralized`` / ``hierarchical`` — sink-based rounds (uplink relay
+      + downlink broadcast; identical ISL cost, they differ only in what
+      the sinks do terrestrially),
+    - ``gossip_getmeas`` / ``gossip_get1meas`` — the decentralized TDM
+      passes over the same materialized schedule.
+
+    This is the oracle ``benchmarks/groundseg_round_time.py`` sweeps and
+    the schedule optimizer scores sink-based schedules with.
+    """
+    sched = plan.schedule(
+        antennas=antennas,
+        payload_bytes=payload_bytes,
+        optimize=optimize,
+        acquisition_s=acquisition_s,
+    )
+    central = groundseg_schedule_cost(
+        sched, sinks, payload_bytes, n_nodes=plan.n_nodes
+    )
+    return {
+        "centralized": central,
+        "hierarchical": central,
+        "gossip_getmeas": schedule_cost(
+            sched, payload_bytes, "getmeas", acquisition_s
+        ),
+        "gossip_get1meas": schedule_cost(
+            sched, payload_bytes, "get1meas", acquisition_s
+        ),
+    }
+
+
 def fl_round_cost(
     plan: ContactPlan,
     payload_bytes: int,

@@ -163,6 +163,8 @@ def optimize_schedule(
     mode: str = "rate",
     comm_mode: str = "getmeas",
     max_slots: Optional[int] = None,
+    objective: str = "gossip",
+    sinks: Optional[Iterable[int]] = None,
 ) -> OptimizationResult:
     """Pick the cheapest feasible schedule for ``plan`` under the cost oracle.
 
@@ -172,12 +174,26 @@ def optimize_schedule(
     schedule's ``schedule_cost`` is never above the baseline's — the
     invariant ``tests/test_schedule_optimizer.py`` proves on random plans.
 
+    ``objective`` selects what the oracle prices: ``"gossip"`` (default)
+    scores one decentralized TDM pass (``cost.schedule_cost``);
+    ``"groundseg"`` scores a sink-based centralized round — uplink relays
+    + downlink broadcast routed over each candidate's slots
+    (``cost.groundseg_schedule_cost``; requires ``sinks``). The
+    never-worse-than-greedy guarantee holds per objective, since every
+    candidate is scored by the same oracle.
+
     Candidates are always scored over the FULL plan (equal work — every
     candidate realizes the same exchanges). ``max_slots`` then caps the
     *returned winner's* materialized slots, exactly like
     ``ContactPlan.schedule(max_slots=)``; truncating before scoring would
     let a "winner" look fast by simply skipping expensive exchanges.
     """
+    if objective not in ("gossip", "groundseg"):
+        raise ValueError(
+            f"objective must be 'gossip' or 'groundseg', got {objective!r}"
+        )
+    if objective == "groundseg" and sinks is None:
+        raise ValueError("objective='groundseg' needs the sink node ids")
     if mode == "rate":
         names: Tuple[str, ...] = STRATEGIES
     elif mode in _COLORER_FACTORIES:
@@ -200,9 +216,14 @@ def optimize_schedule(
             colorer=colorer,
         )
         candidates[name] = sched
-        costs[name] = cost_lib.schedule_cost(
-            sched, payload_bytes, comm_mode, acquisition_s
-        )
+        if objective == "groundseg":
+            costs[name] = cost_lib.groundseg_schedule_cost(
+                sched, sinks, payload_bytes, n_nodes=plan.n_nodes
+            )
+        else:
+            costs[name] = cost_lib.schedule_cost(
+                sched, payload_bytes, comm_mode, acquisition_s
+            )
     best = "greedy"
     for name in names:
         if costs[name].time_s < costs[best].time_s:

@@ -126,6 +126,53 @@ def build_spec(params: Any, block: int = DEFAULT_BLOCK) -> FlatSpec:
     )
 
 
+# Specs are pure functions of (tree structure, leaf shapes/dtypes, block),
+# and FL loops re-trace the same model layout for every distinct topology —
+# re-deriving the layout per compile is pure waste. Bounded FIFO cache;
+# keys hold treedefs and shape tuples only (no arrays, so no device memory).
+_SPEC_CACHE: Dict[Any, FlatSpec] = {}
+_SPEC_CACHE_MAX = 128
+_SPEC_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _spec_key(params: Any, block: int):
+    leaves, treedef = jax.tree.flatten(params)
+    return (
+        treedef,
+        int(block),
+        tuple(
+            (jnp.asarray(l).dtype.name, tuple(jnp.shape(l))) for l in leaves
+        ),
+    )
+
+
+def cached_spec(params: Any, block: int = DEFAULT_BLOCK) -> FlatSpec:
+    """:func:`build_spec` behind a cache keyed by (treedef, leaf
+    shapes/dtypes, block). Works on tracers and concrete arrays alike —
+    the key never touches values, so one layout derivation serves every
+    (re)trace of the same model."""
+    key = _spec_key(params, block)
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        _SPEC_CACHE_STATS["misses"] += 1
+        spec = build_spec(params, block=block)
+        if len(_SPEC_CACHE) >= _SPEC_CACHE_MAX:
+            _SPEC_CACHE.pop(next(iter(_SPEC_CACHE)))
+        _SPEC_CACHE[key] = spec
+    else:
+        _SPEC_CACHE_STATS["hits"] += 1
+    return spec
+
+
+def spec_cache_stats() -> Dict[str, int]:
+    return dict(_SPEC_CACHE_STATS, size=len(_SPEC_CACHE))
+
+
+def clear_spec_cache() -> None:
+    _SPEC_CACHE.clear()
+    _SPEC_CACHE_STATS.update(hits=0, misses=0)
+
+
 def flatten_pytree(spec: FlatSpec, params: Any) -> Dict[str, jax.Array]:
     """Pytree -> {dtype name: flat padded buffer} (one concatenate per bucket)."""
     leaves, treedef = jax.tree.flatten(params)
@@ -277,7 +324,7 @@ def fused_tdm_fla_round(
     """
     if len(rel) == 0:
         return params, residuals
-    spec = build_spec(params, block=block)
+    spec = cached_spec(params, block=block)
     buffers = flatten_pytree(spec, params)
     res_in = residuals if isinstance(residuals, dict) else {}
     mixed, res_out = {}, {}

@@ -1,0 +1,41 @@
+"""Ground-segment subsystem: ground stations as first-class FL sinks.
+
+The paper's generic *centralized* FLA, deployed over real contact
+geometry: satellites train locally; their parameter payloads ride
+store-and-forward multi-hop ISL relays to ground sinks over the TDM slots
+a :class:`~repro.constellation.contact_plan.ContactPlan` materialized; the
+sinks FedAvg (optionally pooling over terrestrial backhaul); and the
+global model floods back out on the downlink slots.
+
+- :mod:`repro.groundseg.routing`     — earliest-delivery contact-graph
+  router (backward DP over the time-expanded slot sequence; reports
+  unreachable satellites instead of hanging) plus the static uplink relay
+  and downlink broadcast programs and their ppermute-legal batching.
+- :mod:`repro.groundseg.aggregation` — the programs lowered to SPMD
+  collectives on the fused flat buffers (:mod:`repro.core.fused`): one
+  ppermute batch per buffer per relay slot (two for int8 via the Pallas
+  ``tdm_compress`` kernels), one masked psum per buffer to pool sinks.
+
+Drivers live in :func:`repro.launch.fl_train.run_groundseg_fl`; the
+centralized-vs-decentralized cost oracle in
+:func:`repro.constellation.cost.groundseg_round_cost`.
+
+Pipeline, end to end::
+
+    geom = orbits.WalkerDelta(total=6, planes=2, altitude_km=8062.0)
+    gs = [orbits.GroundStation(0.0, 0.0), orbits.GroundStation(45.0, 100.0)]
+    plan = contact_plan.build_contact_plan(
+        geom, duration_s=geom.period_s, step_s=geom.period_s / 12,
+        ground_stations=gs)
+    sched = plan.schedule(antennas=2)
+    sinks = range(geom.total, plan.n_nodes)
+    table = routing.earliest_delivery_routes(
+        list(sched.tdm), plan.n_nodes, sinks)
+    up = routing.build_relay_program(list(sched.tdm), plan.n_nodes, sinks)
+    down = routing.build_broadcast_program(
+        list(sched.tdm), plan.n_nodes, sinks)
+"""
+
+from repro.groundseg import aggregation, routing
+
+__all__ = ["aggregation", "routing"]

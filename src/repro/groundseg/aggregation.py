@@ -1,0 +1,289 @@
+"""Centralized / hierarchical FedAvg over the ground segment, as SPMD
+collectives on the fused flat buffers.
+
+The paper's *generic centralized FLA* (its first generic algorithm),
+deployed the way real ISL constellations do it: satellites train locally,
+their parameter payloads ride the store-and-forward relay programs of
+:mod:`repro.groundseg.routing` to ground sinks over the TDM schedule, the
+sinks FedAvg, and the global model floods back out on the downlink slots.
+
+Everything here runs inside ``shard_map`` over the node axis (satellites
+AND ground sinks are node groups, exactly like :mod:`repro.core.tdm`), and
+every payload is a fused dtype-bucketed flat buffer from
+:mod:`repro.core.fused` — so one relay slot costs one ``ppermute`` batch
+per buffer (two for int8: payload + blockwise scales), never one per model
+leaf. Key structural facts, all static Python:
+
+- Uplink (:func:`relay_uplink`): per slot, senders ship their whole
+  accumulated buffer and shed it; receivers add what lands. The sum over
+  all nodes is invariant, so whatever reaches a sink is exactly
+  ``sum_i params_i`` over the satellites routed to it. FedAvg weights are
+  payload *counts*, which the routing program knows statically — no weight
+  ever travels on an ISL.
+- Aggregation (:func:`sink_fedavg`): each sink averages its delivered
+  payloads together with its own held model (weight 1 — the previous
+  global anchors rounds where few updates land). ``pool=True`` adds ONE
+  masked ``psum`` per buffer to reconcile the sinks over their terrestrial
+  backhaul (free in ISL terms): that is centralized FedAvg. ``pool=False``
+  keeps per-sink regional models: the hierarchical mode, whose regions
+  re-mix only on their sync cadence.
+- Downlink (:func:`broadcast_downlink`): the flood program's receivers
+  OVERWRITE their buffer from the ppermute; covered nodes then unflatten
+  and adopt, uncovered satellites keep their locally-trained params (the
+  paper's skip-slot semantics applied to the model broadcast).
+
+int8 relaying re-quantizes per hop (each relay re-encodes before its next
+transmission — physically honest for a store-and-forward radio) using the
+same Pallas ``tdm_compress`` kernels as the fused gossip engine, with the
+receive side folding dequant+accumulate into one pass over the buffer.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fused
+from repro.groundseg.routing import (
+    BroadcastProgram,
+    RelayProgram,
+    permutation_batches,
+)
+from repro.kernels.tdm_compress import ref as q_ref
+from repro.kernels.tdm_compress import tdm_compress as q_kernel
+
+Buffers = Dict[str, jax.Array]
+
+_COMPRESSIONS = ("none", "int8")
+
+
+def _check_compression(compression: str) -> None:
+    if compression not in _COMPRESSIONS:
+        raise ValueError(
+            f"groundseg relay compression must be one of {_COMPRESSIONS}, "
+            f"got {compression!r} (topk/CHOCO is stateful per relation and "
+            "does not fit a one-shot relay hop)"
+        )
+
+
+def _quantize(x32: jax.Array, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.quantize_ref(x32, block=block)
+    return q_kernel.quantize_fwd(
+        x32, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def _dequant_acc(q, s, acc, w, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.dequant_acc_ref(q, s, acc, w, block=block)
+    return q_kernel.dequant_accumulate_fwd(
+        q, s, acc, w, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def _ppermute(x: jax.Array, perm: Sequence[Tuple[int, int]], axis_name: str):
+    return jax.lax.ppermute(x, axis_name, list(perm))
+
+
+def _mask(ids, n: int) -> np.ndarray:
+    m = np.zeros((n,), dtype=bool)
+    m[list(ids)] = True
+    return m
+
+
+def relay_uplink(
+    buffers: Buffers,
+    program: RelayProgram,
+    axis_name: str,
+    *,
+    compression: str = "none",
+    block: int = fused.DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+) -> Buffers:
+    """Execute the uplink relay program on fused buffers.
+
+    Per slot: every scheduled sender ships its whole accumulated buffer
+    (one ppermute batch per buffer; int8 ships payload + scales) and sheds
+    it; arrivals — including arrivals AT a sender, which stay for its next
+    scheduled hop — accumulate. Nodes outside the program are untouched.
+    """
+    _check_compression(compression)
+    impl = fused._resolve_impl(quant_impl) if compression == "int8" else None
+    n = program.n_nodes
+    idx = jax.lax.axis_index(axis_name)
+    out = dict(buffers)
+    for sends in program.slot_sends:
+        if not sends:
+            continue
+        is_sender = jnp.asarray(_mask([s for s, _ in sends], n))[idx]
+        batches = permutation_batches(sends)
+        for bucket, buf in out.items():
+            if compression == "int8":
+                x32 = buf.astype(jnp.float32)
+                q, s = _quantize(x32, block, impl)
+                acc = jnp.where(is_sender, 0.0, x32)
+                for batch in batches:
+                    q_r = _ppermute(q, batch, axis_name)
+                    s_r = _ppermute(s, batch, axis_name)
+                    acc = _dequant_acc(
+                        q_r, s_r, acc, jnp.float32(1.0), block, impl
+                    )
+                out[bucket] = acc.astype(buf.dtype)
+            else:
+                acc = jnp.where(is_sender, jnp.zeros_like(buf), buf)
+                for batch in batches:
+                    acc = acc + _ppermute(buf, batch, axis_name)
+                out[bucket] = acc
+    return out
+
+
+def sink_weights(program: RelayProgram) -> np.ndarray:
+    """Static FedAvg denominators: per node, the number of payloads its
+    post-uplink buffer sums (delivered satellites + the sink's own model
+    for sinks; 0 elsewhere — non-sinks never divide)."""
+    w = np.zeros((program.n_nodes,), dtype=np.float32)
+    for k, srcs in program.delivered.items():
+        w[k] = 1.0 + len(srcs)
+    return w
+
+
+def sink_fedavg(
+    buffers: Buffers,
+    program: RelayProgram,
+    axis_name: str,
+    *,
+    pool: bool,
+) -> Buffers:
+    """FedAvg at the sinks: regional mean of (own model + delivered sums).
+
+    ``pool=True`` reconciles the sinks over terrestrial backhaul — one
+    masked ``psum`` per buffer pools the raw weighted sums so every sink
+    holds the identical global FedAvg (centralized mode / the hierarchical
+    sync round). ``pool=False`` leaves per-sink regional models. Satellite
+    buffers pass through untouched (the psum is computed everywhere, as
+    SPMD requires, but masked out of non-sink lanes)."""
+    n = program.n_nodes
+    idx = jax.lax.axis_index(axis_name)
+    w = sink_weights(program)
+    is_sink = jnp.asarray(_mask(program.sinks, n))[idx]
+    total_w = float(w.sum())
+    my_w = jnp.asarray(np.maximum(w, 1.0))[idx]
+    out = {}
+    for bucket, buf in buffers.items():
+        f32 = buf.astype(jnp.float32)
+        if pool:
+            pooled = jax.lax.psum(
+                jnp.where(is_sink, f32, jnp.zeros_like(f32)), axis_name
+            )
+            avg = pooled / max(total_w, 1.0)
+        else:
+            avg = f32 / my_w
+        out[bucket] = jnp.where(is_sink, avg, f32).astype(buf.dtype)
+    return out
+
+
+def broadcast_downlink(
+    buffers: Buffers,
+    program: BroadcastProgram,
+    axis_name: str,
+    *,
+    compression: str = "none",
+    block: int = fused.DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+) -> Buffers:
+    """Execute the downlink flood on fused buffers: each receiver adopts
+    its (single) parent's buffer the slot it is first covered."""
+    _check_compression(compression)
+    impl = fused._resolve_impl(quant_impl) if compression == "int8" else None
+    n = program.n_nodes
+    idx = jax.lax.axis_index(axis_name)
+    out = dict(buffers)
+    for sends in program.slot_sends:
+        if not sends:
+            continue
+        batches = permutation_batches(sends)
+        for bucket, buf in out.items():
+            if compression == "int8":
+                x32 = buf.astype(jnp.float32)
+                q, s = _quantize(x32, block, impl)
+                for batch in batches:
+                    got = jnp.asarray(_mask([d for _, d in batch], n))[idx]
+                    q_r = _ppermute(q, batch, axis_name)
+                    s_r = _ppermute(s, batch, axis_name)
+                    dec = _dequant_acc(
+                        q_r, s_r, jnp.zeros_like(x32), jnp.float32(1.0),
+                        block, impl,
+                    )
+                    buf = jnp.where(got, dec.astype(buf.dtype), buf)
+            else:
+                for batch in batches:
+                    got = jnp.asarray(_mask([d for _, d in batch], n))[idx]
+                    recv = _ppermute(buf, batch, axis_name)
+                    buf = jnp.where(got, recv, buf)
+            out[bucket] = buf
+    return out
+
+
+def expected_collectives(
+    uplink: RelayProgram,
+    downlink: BroadcastProgram,
+    n_buckets: int,
+    *,
+    compression: str = "none",
+    pool: bool = True,
+) -> Dict[str, int]:
+    """Static collective counts one ground-segment round lowers to — the
+    oracle the HLO tests compare compiled modules against. Per ppermute
+    batch: one permute per buffer (two for int8: payload + scales); plus
+    one masked psum per buffer when the sinks pool."""
+    from repro.groundseg.routing import program_batch_count
+
+    per_batch = 2 if compression == "int8" else 1
+    batches = program_batch_count(uplink) + program_batch_count(downlink)
+    return {
+        "collective-permute": batches * per_batch * n_buckets,
+        "all-reduce": (n_buckets if pool else 0),
+    }
+
+
+def groundseg_round(
+    params,
+    uplink: RelayProgram,
+    downlink: BroadcastProgram,
+    axis_name: str,
+    *,
+    pool: bool,
+    compression: str = "none",
+    block: int = fused.DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+):
+    """One full ground-segment exchange for a parameter pytree: flatten ->
+    uplink relay -> sink FedAvg (optionally pooled) -> downlink broadcast
+    -> unflatten, adopting the broadcast model only where it arrived.
+
+    Returns the mixed pytree. Satellites outside ``downlink.covered`` keep
+    their input params bit-for-bit (their local training continues; later
+    windows re-sync them), as do unreachable satellites' contributions on
+    the uplink side."""
+    spec = fused.cached_spec(params, block=block)
+    buffers = fused.flatten_pytree(spec, params)
+    buffers = relay_uplink(
+        buffers, uplink, axis_name,
+        compression=compression, block=block, quant_impl=quant_impl,
+    )
+    buffers = sink_fedavg(buffers, uplink, axis_name, pool=pool)
+    buffers = broadcast_downlink(
+        buffers, downlink, axis_name,
+        compression=compression, block=block, quant_impl=quant_impl,
+    )
+    mixed = fused.unflatten_pytree(spec, buffers)
+    n = uplink.n_nodes
+    idx = jax.lax.axis_index(axis_name)
+    adopt = jnp.asarray(_mask(downlink.covered, n))[idx]
+    return jax.tree.map(
+        lambda new, old: jnp.where(adopt, new, old), mixed, params
+    )

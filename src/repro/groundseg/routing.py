@@ -1,0 +1,374 @@
+"""Store-and-forward contact-graph routing over a TDM slot sequence.
+
+The ground-segment subsystem's scheduling core: given the slot relations a
+:class:`~repro.constellation.contact_plan.ContactPlan` materialized (each
+slot = one parallel TDM exchange opportunity), compute for every satellite
+the EARLIEST slot by which its payload can reach a ground sink, allowing
+multi-hop ISL relays — classic contact-graph routing (CGR) specialized to
+the repo's slot algebra.
+
+The computation is a backward DP over the time-expanded contact graph
+rather than an explicit Dijkstra over (node, time) vertices: with ``T``
+slots and per-slot relations, ``f[v][t]`` = earliest delivery slot for a
+payload held by ``v`` at the *start* of slot ``t``. One hop per slot (a
+slot is a single parallel exchange; data received during slot ``t`` can be
+forwarded no earlier than slot ``t+1``):
+
+    f[v][t] = min( f[v][t+1],                                  # hold
+                   min over {v,u} in slots[t]:
+                       t            if u is a sink             # deliver
+                       f[u][t+1]    otherwise )                # relay
+
+The DP runs in O(T·(V+E)) and always terminates after T steps, so an
+unreachable satellite (no contact path to any sink inside the horizon) is
+*reported* (``Route.sink is None``), never spun on. Ties prefer holding
+(fewer transmissions) and then the lowest next-hop id, keeping every
+product of this module deterministic — the property the paper's
+assumption (a) (common knowledge of the schedule) needs so ground and
+space segments compute identical plans independently.
+
+On top of the per-(node, time) policy two STATIC programs are derived:
+
+- :func:`build_relay_program` — the uplink: start every (alive, reachable)
+  satellite with its own payload, replay the policy, and record the
+  directed sends per slot. Payloads merge at shared relays
+  (accumulate-and-forward: a carrier ships everything it holds and sheds
+  it), so the per-slot digraph has out-degree <= 1 and the sink receives a
+  SUM — exactly what FedAvg wants.
+- :func:`build_broadcast_program` — the downlink: flood the global model
+  from the sinks outward, each uncovered node adopting one covered
+  neighbor per slot.
+
+Both programs are pure Python; :mod:`repro.groundseg.aggregation` lowers
+them to ``ppermute`` chains over the fused flat buffers. The ppermute
+legality constraint (each device sends at most one and receives at most
+one payload per collective) is handled by :func:`permutation_batches`.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+from repro.core.relation import Relation
+
+DirectedEdge = Tuple[int, int]
+
+
+@dataclass(frozen=True)
+class Hop:
+    """One scheduled transfer: ``src`` sends to ``dst`` during ``slot``."""
+
+    slot: int
+    src: int
+    dst: int
+
+
+@dataclass(frozen=True)
+class Route:
+    """One satellite's earliest-delivery path to the ground segment."""
+
+    source: int
+    sink: Optional[int]            # delivering sink; None = unreachable
+    delivery_slot: Optional[int]   # slot whose transfer lands at the sink
+    hops: Tuple[Hop, ...]
+
+    @property
+    def reachable(self) -> bool:
+        return self.sink is not None
+
+
+@dataclass(frozen=True)
+class RoutingTable:
+    """Earliest-delivery routes for every source, plus the DP policy."""
+
+    n_nodes: int
+    n_slots: int
+    sinks: FrozenSet[int]
+    routes: Dict[int, Route]
+    # policy[t][v]: None = hold, else the neighbor v forwards to in slot t
+    policy: Tuple[Tuple[Optional[int], ...], ...]
+
+    def reachable(self) -> List[int]:
+        return sorted(s for s, r in self.routes.items() if r.reachable)
+
+    def unreachable(self) -> List[int]:
+        return sorted(s for s, r in self.routes.items() if not r.reachable)
+
+    def max_delivery_slot(self) -> Optional[int]:
+        """Latest delivery slot over the reachable sources (None if none)."""
+        slots = [
+            r.delivery_slot for r in self.routes.values() if r.reachable
+        ]
+        return max(slots) if slots else None
+
+
+def _neighbors(rel: Relation, v: int) -> List[int]:
+    return rel.peers_of(v)
+
+
+def earliest_delivery_routes(
+    slots: Sequence[Relation],
+    n_nodes: int,
+    sinks: Iterable[int],
+    sources: Optional[Iterable[int]] = None,
+) -> RoutingTable:
+    """Earliest-delivery contact-graph routes from each source to any sink.
+
+    ``slots`` is the materialized TDM slot sequence (e.g.
+    ``ContactSchedule.tdm.slots`` or ``ContactPlan.relations()``);
+    ``sources`` defaults to every non-sink node id. A source that IS a sink
+    is trivially delivered (empty hop list, ``delivery_slot=-1``).
+    """
+    sink_s = frozenset(int(s) for s in sinks)
+    if not sink_s:
+        raise ValueError("need at least one sink node")
+    bad = [s for s in sink_s if not (0 <= s < n_nodes)]
+    if bad:
+        raise ValueError(f"sink ids {bad} outside node range 0..{n_nodes - 1}")
+    if sources is None:
+        src_list = [v for v in range(n_nodes) if v not in sink_s]
+    else:
+        src_list = sorted(set(int(s) for s in sources))
+    T = len(slots)
+
+    # backward DP: f_next = f[.][t+1]; policy filled for t = T-1 .. 0
+    f_next = [math.inf] * n_nodes
+    policy: List[Tuple[Optional[int], ...]] = []
+    for t in range(T - 1, -1, -1):
+        rel = slots[t]
+        f_cur = list(f_next)
+        row: List[Optional[int]] = [None] * n_nodes
+        for v in range(n_nodes):
+            if v in sink_s:
+                continue
+            best = f_next[v]           # hold (preferred on ties)
+            act: Optional[int] = None
+            for u in _neighbors(rel, v):
+                val = t if u in sink_s else f_next[u]
+                if val < best:
+                    best, act = val, u
+            f_cur[v] = best
+            row[v] = act
+        f_next = f_cur
+        policy.append(tuple(row))
+    policy.reverse()
+    f0 = f_next  # f[.][0]
+
+    routes: Dict[int, Route] = {}
+    for s in src_list:
+        if s in sink_s:
+            routes[s] = Route(source=s, sink=s, delivery_slot=-1, hops=())
+            continue
+        if not math.isfinite(f0[s]):
+            routes[s] = Route(source=s, sink=None, delivery_slot=None, hops=())
+            continue
+        hops: List[Hop] = []
+        v = s
+        for t in range(T):
+            if v in sink_s:
+                break
+            nxt = policy[t][v]
+            if nxt is not None:
+                hops.append(Hop(slot=t, src=v, dst=nxt))
+                v = nxt
+        assert v in sink_s, f"finite DP value but walk missed a sink for {s}"
+        routes[s] = Route(
+            source=s, sink=v, delivery_slot=hops[-1].slot, hops=tuple(hops)
+        )
+    return RoutingTable(
+        n_nodes=n_nodes,
+        n_slots=T,
+        sinks=sink_s,
+        routes=routes,
+        policy=tuple(policy),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Static uplink / downlink programs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RelayProgram:
+    """The uplink as a static per-slot directed-send plan.
+
+    ``slot_sends[t]`` holds ``(src, dst)`` transfers for slot ``t`` — src
+    ships its ENTIRE accumulated payload and sheds it (out-degree <= 1 per
+    node per slot by construction; fan-in merges at the receiver).
+    ``delivered[k]`` is the set of source satellites whose payload lands at
+    sink ``k``; ``weights[v]`` the number of source payloads node ``v`` is
+    carrying into each sink (used as the static FedAvg denominators).
+    """
+
+    n_nodes: int
+    sinks: FrozenSet[int]
+    slot_sends: Tuple[Tuple[DirectedEdge, ...], ...]
+    delivered: Dict[int, FrozenSet[int]]
+    unreachable: FrozenSet[int]
+
+    @property
+    def n_hops(self) -> int:
+        return sum(len(s) for s in self.slot_sends)
+
+    def delivered_count(self) -> int:
+        return sum(len(v) for v in self.delivered.values())
+
+    def last_used_slot(self) -> Optional[int]:
+        used = [t for t, s in enumerate(self.slot_sends) if s]
+        return max(used) if used else None
+
+
+def build_relay_program(
+    slots: Sequence[Relation],
+    n_nodes: int,
+    sinks: Iterable[int],
+    sources: Optional[Iterable[int]] = None,
+    table: Optional[RoutingTable] = None,
+) -> RelayProgram:
+    """Replay the routing policy with every reachable source injecting its
+    payload at slot 0, merging payloads that meet at a relay."""
+    if table is None:
+        table = earliest_delivery_routes(slots, n_nodes, sinks, sources)
+    sink_s = table.sinks
+    carrying: Dict[int, set] = {}
+    delivered: Dict[int, set] = {k: set() for k in sorted(sink_s)}
+    unreachable = set()
+    for s, route in table.routes.items():
+        if s in sink_s:
+            continue
+        if not route.reachable:
+            unreachable.add(s)
+            continue
+        carrying.setdefault(s, set()).add(s)
+    slot_sends: List[Tuple[DirectedEdge, ...]] = []
+    for t in range(table.n_slots):
+        outgoing: Dict[int, int] = {}
+        for v in sorted(carrying):
+            if not carrying[v]:
+                continue
+            nxt = table.policy[t][v]
+            if nxt is not None:
+                outgoing[v] = nxt
+        loads = {v: carrying[v] for v in outgoing}
+        for v in outgoing:
+            carrying[v] = set()
+        for v, u in outgoing.items():
+            if u in sink_s:
+                delivered[u] |= loads[v]
+            else:
+                carrying.setdefault(u, set()).update(loads[v])
+        slot_sends.append(tuple(sorted(outgoing.items())))
+    leftover = {v for v, load in carrying.items() if load}
+    assert not leftover, (
+        f"relay left payloads stranded at {sorted(leftover)} — the routing "
+        "policy must deliver every reachable source inside the horizon"
+    )
+    return RelayProgram(
+        n_nodes=n_nodes,
+        sinks=sink_s,
+        slot_sends=tuple(slot_sends),
+        delivered={k: frozenset(v) for k, v in delivered.items()},
+        unreachable=frozenset(unreachable),
+    )
+
+
+@dataclass(frozen=True)
+class BroadcastProgram:
+    """The downlink as a static per-slot directed-send plan.
+
+    Flood from the sinks: ``slot_sends[t]`` holds ``(src, dst)`` where a
+    covered ``src`` hands the model to an uncovered ``dst`` (one parent per
+    receiver; a node covered during slot ``t`` first forwards in ``t+1``).
+    ``covered`` is every node holding the model at horizon end (sinks
+    included); satellites outside it keep their local params — the paper's
+    skip-slot semantics on the downlink side.
+    """
+
+    n_nodes: int
+    sinks: FrozenSet[int]
+    slot_sends: Tuple[Tuple[DirectedEdge, ...], ...]
+    covered: FrozenSet[int]
+    receive_slot: Dict[int, int]
+
+    @property
+    def n_hops(self) -> int:
+        return sum(len(s) for s in self.slot_sends)
+
+    def last_used_slot(self) -> Optional[int]:
+        used = [t for t, s in enumerate(self.slot_sends) if s]
+        return max(used) if used else None
+
+
+def build_broadcast_program(
+    slots: Sequence[Relation],
+    n_nodes: int,
+    sinks: Iterable[int],
+) -> BroadcastProgram:
+    """Earliest-arrival flood of the global model from the sinks."""
+    sink_s = frozenset(int(s) for s in sinks)
+    if not sink_s:
+        raise ValueError("need at least one sink node")
+    have = set(sink_s)
+    slot_sends: List[Tuple[DirectedEdge, ...]] = []
+    receive_slot: Dict[int, int] = {}
+    for t, rel in enumerate(slots):
+        new: Dict[int, int] = {}
+        for v in sorted(rel.participants()):
+            if v in have:
+                continue
+            parents = [u for u in _neighbors(rel, v) if u in have]
+            if parents:
+                new[v] = min(parents)
+        for v, p in new.items():
+            receive_slot[v] = t
+        have |= set(new)
+        slot_sends.append(tuple(sorted((p, v) for v, p in new.items())))
+    return BroadcastProgram(
+        n_nodes=n_nodes,
+        sinks=sink_s,
+        slot_sends=tuple(slot_sends),
+        covered=frozenset(have),
+        receive_slot=receive_slot,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ppermute-legal batching
+# ---------------------------------------------------------------------------
+
+def permutation_batches(
+    edges: Sequence[DirectedEdge],
+) -> List[Tuple[DirectedEdge, ...]]:
+    """Split directed sends into ppermute-legal batches.
+
+    ``jax.lax.ppermute`` requires unique sources AND unique destinations
+    per call; a slot's send set can violate either (fan-in at a relay on
+    the uplink, fan-out at a broadcaster on the downlink). First-fit in
+    the given order keeps the result deterministic; the batch count is
+    bounded by the max in/out multiplicity, which the antenna budget
+    already bounded at schedule time."""
+    batches: List[List[DirectedEdge]] = []
+    srcs: List[set] = []
+    dsts: List[set] = []
+    for s, d in edges:
+        for batch, bs, bd in zip(batches, srcs, dsts):
+            if s not in bs and d not in bd:
+                batch.append((s, d))
+                bs.add(s)
+                bd.add(d)
+                break
+        else:
+            batches.append([(s, d)])
+            srcs.append({s})
+            dsts.append({d})
+    return [tuple(b) for b in batches]
+
+
+def program_batch_count(
+    program: "RelayProgram | BroadcastProgram",
+) -> int:
+    """Total ppermute batches a program lowers to (per payload buffer) —
+    the static count the HLO tests verify against compiled modules."""
+    return sum(len(permutation_batches(s)) for s in program.slot_sends if s)

@@ -287,6 +287,242 @@ def run_constellation_fl(
     )
 
 
+# ===========================================================================
+# Ground-segment (centralized / hierarchical) FL over contact-graph routes
+# ===========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class GroundSegConfig:
+    """Config for sink-based FL over the ground segment.
+
+    mode: 'centralized'  — sinks pool every round over terrestrial backhaul
+                           (one masked psum per buffer); every satellite
+                           that the downlink reaches gets the same global.
+          'hierarchical' — sinks keep regional FedAvg models and pool only
+                           every ``sink_sync_every`` rounds; regions mix on
+                           the sync cadence (and through satellites whose
+                           routes migrate between sinks as orbits advance).
+    compression: relay payload encoding ('none' | 'int8' — blockwise via
+                 the Pallas tdm_compress kernels, re-quantized per hop).
+    """
+
+    mode: str = "centralized"
+    sink_sync_every: int = 2
+    compression: str = "none"
+    block: int = 1024
+    quant_impl: str = "auto"
+
+    def __post_init__(self):
+        if self.mode not in ("centralized", "hierarchical"):
+            raise ValueError(f"unknown groundseg mode {self.mode!r}")
+        if self.compression not in ("none", "int8"):
+            raise ValueError(
+                f"groundseg compression must be 'none' or 'int8', "
+                f"got {self.compression!r}"
+            )
+
+    def pool_round(self, rnd: int) -> bool:
+        """Do the sinks reconcile over backhaul this round?"""
+        if self.mode == "centralized":
+            return True
+        return self.sink_sync_every > 0 and rnd % self.sink_sync_every == 0
+
+
+def build_groundseg_round(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    mesh: Mesh,
+    n_nodes: int,
+    fl_cfg: FLConfig,
+    gs_cfg: GroundSegConfig,
+    uplink,
+    downlink,
+    pool: bool,
+    axis: str = "data",
+) -> Callable:
+    """One ground-segment FL round: satellites run ``local_steps`` SGD
+    steps on their own shards (sinks hold — ground stations have no
+    training data, their lanes compute and discard, as SPMD demands), then
+    the full uplink-relay -> sink-FedAvg -> downlink-broadcast exchange
+    from :func:`repro.groundseg.aggregation.groundseg_round` runs on the
+    fused buffers. Same (stacked_state, stacked_batch) contract as
+    :func:`build_fl_round`."""
+    from repro.groundseg import aggregation
+
+    b = registry.bundle(cfg)
+    sink_mask = np.zeros((n_nodes,), dtype=bool)
+    sink_mask[sorted(uplink.sinks)] = True
+
+    def node_round(state, batch):
+        state = jax.tree.map(lambda x: x[0], state)
+        batch = jax.tree.map(lambda x: x[0], batch)
+        idx = jax.lax.axis_index(axis)
+        is_sink = jnp.asarray(sink_mask)[idx]
+
+        def one_step(st, mb):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: b.loss_fn(p, mb), has_aux=True
+            )(st["params"])
+            new_p, new_opt, _ = adamw.apply_updates(
+                st["params"], grads, st["opt"], opt_cfg
+            )
+            return {"params": new_p, "opt": new_opt, "step": st["step"] + 1}, loss
+
+        trained = state
+        losses = []
+        for h in range(fl_cfg.local_steps):
+            mb = jax.tree.map(lambda x: x[h], batch)
+            trained, loss = one_step(trained, mb)
+            losses.append(loss)
+        local_loss = jnp.stack(losses).mean()
+        # sinks are aggregation infrastructure, not learners
+        state = jax.tree.map(
+            lambda new, old: jnp.where(is_sink, old, new), trained, state
+        )
+
+        params = aggregation.groundseg_round(
+            state["params"],
+            uplink,
+            downlink,
+            axis,
+            pool=pool,
+            compression=gs_cfg.compression,
+            block=gs_cfg.block,
+            quant_impl=gs_cfg.quant_impl,
+        )
+        state = dict(state, params=params)
+
+        state = jax.tree.map(lambda x: x[None], state)
+        return state, local_loss[None]
+
+    spec_state = P(axis)
+    fn = shard_map(
+        node_round,
+        mesh=mesh,
+        in_specs=(spec_state, spec_state),
+        out_specs=(spec_state, P(axis)),
+        check_rep=False,  # same reason as build_fl_round (+ pallas int8 path)
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
+@dataclasses.dataclass(frozen=True)
+class GroundSegRoundLog:
+    round: int
+    loss: float          # mean over live satellites (sinks excluded)
+    consensus: float     # consensus distance over satellite params
+    delivered: int       # satellite payloads landing at sinks this round
+    covered: int         # satellites the downlink reached
+    unreachable: int     # live satellites with no route to any sink
+    alive: int           # live satellites
+    pooled: bool         # sinks reconciled over backhaul this round
+
+
+def run_groundseg_fl(
+    cfg: ModelConfig,
+    opt_cfg,
+    mesh: Mesh,
+    n_nodes: int,
+    fl_cfg: FLConfig,
+    gs_cfg: GroundSegConfig,
+    plan,
+    state: Any,
+    batch_fn: Callable[[int], Any],
+    sinks,
+    rounds: int,
+    alive: Optional[set] = None,
+    on_round: Optional[Callable[[GroundSegRoundLog], None]] = None,
+    optimize: Optional[str] = None,
+    antennas=None,
+    payload_bytes: int = 1 << 20,
+    acquisition_s: float = 0.0,
+    log_every: int = 1,
+):
+    """Centralized/hierarchical FL with ground stations as aggregation
+    sinks, routed over the plan's materialized TDM schedule.
+
+    ``plan`` must include the ground stations
+    (``build_contact_plan(..., ground_stations=[...])``); ``sinks`` are
+    their node ids (satellites first, then ground — node ids ``geom.total``
+    onward). Each round: local training, store-and-forward uplink of every
+    reachable satellite's params along its earliest-delivery route, sink
+    FedAvg (pooled per :meth:`GroundSegConfig.pool_round`), and the global
+    (or regional) model flooding back on the downlink — uplink on one
+    schedule window, downlink on the next identical window (orbits are
+    periodic when the horizon is one period).
+
+    ``alive`` keeps the :func:`run_tdm_rounds` contract: read every round,
+    mutable mid-flight; sinks are ground infrastructure and always up.
+    Routing, relay and broadcast programs, and the compiled round are
+    cached per (alive-set, pool-flag) — orbital periodicity makes revisits
+    cache hits. Returns ``(state, [GroundSegRoundLog, ...])``.
+    """
+    from repro.groundseg import routing
+
+    sinks_s = frozenset(int(s) for s in sinks)
+    if not sinks_s:
+        raise ValueError("run_groundseg_fl needs at least one sink node id")
+    sched = plan.schedule(
+        antennas=antennas,
+        payload_bytes=payload_bytes,
+        optimize=optimize,
+        acquisition_s=acquisition_s,
+    )
+    base_rels = list(sched.tdm)
+    sat_ids = [v for v in range(n_nodes) if v not in sinks_s]
+    # routing depends only on the alive set; the compiled round also on the
+    # pool flag — two caches so hierarchical pool/regional alternation does
+    # not redo the DP and program replay
+    prog_cache: Dict[Any, Any] = {}
+    fn_cache: Dict[Any, Any] = {}
+    logs: list = []
+    for rnd in range(rounds):
+        live = set(alive) if alive is not None else set(range(n_nodes))
+        live |= sinks_s
+        pool = gs_cfg.pool_round(rnd)
+        live_key = frozenset(live)
+        if live_key not in prog_cache:
+            rels = [r.restrict(live) for r in base_rels]
+            table = routing.earliest_delivery_routes(
+                rels, n_nodes, sinks_s, sources=[v for v in sat_ids if v in live]
+            )
+            up = routing.build_relay_program(
+                rels, n_nodes, sinks_s, table=table
+            )
+            down = routing.build_broadcast_program(rels, n_nodes, sinks_s)
+            prog_cache[live_key] = (up, down)
+        up, down = prog_cache[live_key]
+        if (live_key, pool) not in fn_cache:
+            fn_cache[(live_key, pool)] = build_groundseg_round(
+                cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, up, down, pool
+            )
+        fn = fn_cache[(live_key, pool)]
+        state, losses = fn(state, batch_fn(rnd))
+        live_sats = [v for v in sat_ids if v in live]
+        log_this = log_every > 0 and rnd % log_every == 0
+        if log_this and live_sats:
+            loss_v = float(np.mean(np.asarray(losses)[live_sats]))
+            cons_v = consensus_distance(
+                jax.tree.map(lambda x: np.asarray(x)[live_sats], state["params"])
+            )
+        else:
+            loss_v = cons_v = float("nan")
+        log = GroundSegRoundLog(
+            round=rnd,
+            loss=loss_v,
+            consensus=cons_v,
+            delivered=up.delivered_count(),
+            covered=len(down.covered - sinks_s),
+            unreachable=len(up.unreachable),
+            alive=len(live_sats),
+            pooled=pool,
+        )
+        logs.append(log)
+        if on_round is not None:
+            on_round(log)
+    return state, logs
+
+
 def consensus_distance(stacked_params) -> float:
     """Max relative L2 distance of any node's params from the mean."""
     leaves = jax.tree.leaves(stacked_params)

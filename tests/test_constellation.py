@@ -250,6 +250,97 @@ def test_contact_schedule_alignment_validated():
         )
 
 
+# -------------------------------------------------- ground-node edge cases
+def test_contact_schedule_restrict_with_ground_nodes():
+    """Restricting a materialized schedule must handle ground nodes like
+    any other node: dropping a ground station removes every up/downlink
+    edge; keeping it preserves its slots with rebuilt link metadata."""
+    gs = [GroundStation(0.0, 0.0), GroundStation(30.0, 90.0)]
+    plan = build_contact_plan(
+        GEOM_4x5,
+        duration_s=GEOM_4x5.period_s,
+        step_s=GEOM_4x5.period_s / 12,
+        ground_stations=gs,
+    )
+    assert plan.n_nodes == 22
+    sched = plan.schedule(antennas=2)
+    gs_nodes = {20, 21}
+    has_ground = any(
+        gs_nodes & s.relation.participants() for s in sched.slots
+    )
+    assert has_ground  # equatorial + mid-lat stations see a 4x5 shell
+
+    # drop one ground station: no slot may reference it afterwards, and the
+    # surviving metadata must only hold surviving edges
+    kept = sched.restrict(set(range(21)), antennas=2)
+    for slot in kept.slots:
+        assert 21 not in slot.relation.participants()
+        assert all(21 not in e for e in slot.links)
+        assert slot.min_rate_bps == min(
+            l.rate_bps for l in slot.links.values()
+        )
+    # the other station's contacts survive the restriction
+    assert any(20 in s.relation.participants() for s in kept.slots)
+
+    # drop ALL ground stations: pure ISL schedule remains, still valid
+    isl_only = kept.restrict(set(range(20)), antennas=2)
+    for slot in isl_only.slots:
+        assert gs_nodes.isdisjoint(slot.relation.participants())
+    assert len(isl_only) > 0
+
+
+def test_zero_elevation_horizon_mask():
+    """min_elevation_deg=0 admits a satellite exactly on the horizon
+    (sin(el) >= 0) and strictly widens coverage vs the default mask."""
+    g = np.array([R_EARTH_KM, 0.0, 0.0])
+    horizon_sat = np.array([R_EARTH_KM, 1400.0, 0.0])  # elevation == 0
+    assert links.elevation_visible(g, horizon_sat, 0.0)
+    assert not links.elevation_visible(g, horizon_sat, 10.0)
+    below = np.array([R_EARTH_KM - 10.0, 1400.0, 0.0])  # below horizon
+    assert not links.elevation_visible(g, below, 0.0)
+
+    gs = [GroundStation(0.0, 0.0)]
+    kw = dict(
+        duration_s=GEOM_4x5.period_s,
+        step_s=GEOM_4x5.period_s / 24,
+        ground_stations=gs,
+    )
+    masked = build_contact_plan(GEOM_4x5, budget=LinkBudget(), **kw)
+    open_h = build_contact_plan(
+        GEOM_4x5, budget=LinkBudget(min_elevation_deg=0.0), **kw
+    )
+    count = lambda p: sum(
+        1 for t in range(len(p.times)) for e in p.graphs[t] if 20 in e
+    )
+    assert count(open_h) >= count(masked) > 0
+
+
+def test_router_reports_unreachable_sink_on_real_geometry():
+    """A polar ground station never sees an equatorial shell: the contact
+    plan has no uplink edges and the router must report every satellite
+    unreachable (and return immediately) rather than hang."""
+    from repro.groundseg import routing
+
+    eq = WalkerDelta(total=6, planes=2, inclination_deg=0.0,
+                     altitude_km=550.0)
+    polar_gs = [GroundStation(89.0, 0.0, name="pole")]
+    plan = build_contact_plan(
+        eq,
+        duration_s=eq.period_s,
+        step_s=eq.period_s / 24,
+        ground_stations=polar_gs,
+    )
+    assert plan.n_nodes == 7
+    assert not any(6 in e for t in range(len(plan.times)) for e in plan.graphs[t])
+    sched = plan.schedule(antennas=2)
+    table = routing.earliest_delivery_routes(list(sched.tdm), 7, sinks=[6])
+    assert table.unreachable() == list(range(6))
+    assert table.max_delivery_slot() is None
+    up = routing.build_relay_program(list(sched.tdm), 7, [6], table=table)
+    assert up.n_hops == 0 and up.delivered_count() == 0
+    assert up.unreachable == frozenset(range(6))
+
+
 # ------------------------------------------------------------- cost model
 def test_cost_get1meas_never_faster_than_getmeas():
     plan = plan_4x5()

@@ -1,0 +1,313 @@
+"""Ground-segment subsystem: contact-graph routing, relay/broadcast
+programs, the FedAvg cost oracle, and the FlatSpec cache — single-process
+tests plus the launcher for the multi-device worker
+(_groundseg_worker.py — subprocess, 8 forced host devices)."""
+
+import os
+import pathlib
+import random
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.constellation import contact_plan, cost, orbits
+from repro.constellation.contact_plan import ContactSchedule, Slot
+from repro.constellation.links import Link
+from repro.core import fused
+from repro.core.relation import Relation
+from repro.core.schedule import TDMSchedule
+from repro.groundseg import aggregation, routing
+from repro.launch.fl_train import GroundSegConfig
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def chain_slots():
+    """4 nodes (0..2 sats, 3 sink): 0 must relay through 1."""
+    return [
+        Relation.from_edges([(0, 1)], nodes=range(4)),
+        Relation.from_edges([(1, 3)], nodes=range(4)),
+        Relation.from_edges([(2, 3)], nodes=range(4)),
+    ]
+
+
+# ------------------------------------------------------------------ routing
+def test_earliest_delivery_multi_hop():
+    table = routing.earliest_delivery_routes(chain_slots(), 4, sinks=[3])
+    r0 = table.routes[0]
+    assert r0.sink == 3 and r0.delivery_slot == 1
+    assert [(h.slot, h.src, h.dst) for h in r0.hops] == [(0, 0, 1), (1, 1, 3)]
+    assert table.routes[1].delivery_slot == 1
+    assert table.routes[2].delivery_slot == 2
+    assert table.max_delivery_slot() == 2
+    assert table.unreachable() == []
+
+
+def test_router_reports_unreachable_without_hanging():
+    # satellite 2 never contacts anyone; satellite 0 reaches the sink only
+    # through 1 — and a LONG schedule of empty slots must not loop
+    slots = [Relation.from_edges([(0, 1)], nodes=range(4)),
+             Relation.from_edges([(1, 3)], nodes=range(4))]
+    slots += [Relation.empty(range(4))] * 500
+    table = routing.earliest_delivery_routes(slots, 4, sinks=[3])
+    assert table.unreachable() == [2]
+    assert table.routes[2].sink is None and table.routes[2].hops == ()
+    assert table.reachable() == [0, 1]
+
+
+def test_router_prefers_holding_on_ties():
+    # 0 can deliver directly at slot 1; the slot-0 detour via 1 also
+    # delivers at slot 1 but costs a transmission — the policy must hold
+    slots = [
+        Relation.from_edges([(0, 1)], nodes=range(3)),
+        Relation.from_edges([(0, 2), (1, 2)], nodes=range(3)),
+    ]
+    table = routing.earliest_delivery_routes(slots, 3, sinks=[2])
+    assert [(h.slot, h.src, h.dst) for h in table.routes[0].hops] == [(1, 0, 2)]
+
+
+def test_router_validates_sinks():
+    with pytest.raises(ValueError, match="at least one sink"):
+        routing.earliest_delivery_routes(chain_slots(), 4, sinks=[])
+    with pytest.raises(ValueError, match="outside node range"):
+        routing.earliest_delivery_routes(chain_slots(), 4, sinks=[9])
+
+
+def test_source_that_is_a_sink_is_trivially_delivered():
+    table = routing.earliest_delivery_routes(
+        chain_slots(), 4, sinks=[3], sources=[0, 3]
+    )
+    assert table.routes[3].sink == 3 and table.routes[3].delivery_slot == -1
+
+
+# ----------------------------------------------------- relay and broadcast
+def test_relay_program_delivers_and_merges():
+    up = routing.build_relay_program(chain_slots(), 4, [3])
+    assert up.delivered == {3: frozenset({0, 1, 2})}
+    assert up.unreachable == frozenset()
+    # slot 1: node 1 carries its own + node 0's payload in ONE send
+    assert up.slot_sends[1] == ((1, 3),)
+    assert up.n_hops == 3
+    assert up.last_used_slot() == 2
+    assert up.delivered_count() == 3
+
+
+def test_relay_program_partitions_reachable_sources():
+    rng = random.Random(7)
+    for case in range(25):
+        n = 8
+        sinks = {6, 7}
+        slots = []
+        for _ in range(rng.randrange(1, 7)):
+            edges = [
+                (i, j)
+                for i in range(n)
+                for j in range(i + 1, n)
+                if rng.random() < 0.25
+            ]
+            slots.append(Relation.from_edges(edges, nodes=range(n)))
+        table = routing.earliest_delivery_routes(slots, n, sinks)
+        up = routing.build_relay_program(slots, n, sinks, table=table)
+        delivered_all = set().union(*up.delivered.values())
+        # delivered + unreachable partition the satellite set
+        assert delivered_all | set(up.unreachable) == set(range(6)), case
+        assert delivered_all & set(up.unreachable) == set()
+        # out-degree <= 1 per node per slot (accumulate-and-forward)
+        for sends in up.slot_sends:
+            srcs = [s for s, _ in sends]
+            assert len(srcs) == len(set(srcs))
+        # every send uses an edge of that slot's relation
+        for t, sends in enumerate(up.slot_sends):
+            for s, d in sends:
+                assert (s, d) in slots[t].pairs
+
+
+def test_broadcast_flood_single_parent_and_slot_causality():
+    down = routing.build_broadcast_program(chain_slots(), 4, [3])
+    # node 1 gets the model at slot 1, node 2 at slot 2; node 0's only
+    # contact (slot 0, with then-uncovered 1) precedes coverage -> missed
+    assert down.covered == frozenset({1, 2, 3})
+    assert down.receive_slot == {1: 1, 2: 2}
+    for sends in down.slot_sends:
+        dsts = [d for _, d in sends]
+        assert len(dsts) == len(set(dsts))  # one parent per receiver
+
+
+def test_permutation_batches_are_ppermute_legal():
+    rng = random.Random(3)
+    for case in range(50):
+        edges = [
+            (rng.randrange(8), rng.randrange(8)) for _ in range(rng.randrange(1, 12))
+        ]
+        edges = [(s, d) for s, d in edges if s != d]
+        batches = routing.permutation_batches(edges)
+        flat = [e for b in batches for e in b]
+        assert sorted(flat) == sorted(edges), case  # nothing lost or invented
+        for b in batches:
+            srcs = [s for s, _ in b]
+            dsts = [d for _, d in b]
+            assert len(srcs) == len(set(srcs))
+            assert len(dsts) == len(set(dsts))
+
+
+def test_expected_collectives_math():
+    up = routing.build_relay_program(chain_slots(), 4, [3])
+    down = routing.build_broadcast_program(chain_slots(), 4, [3])
+    want = aggregation.expected_collectives(up, down, 2, compression="int8",
+                                            pool=True)
+    # 3 uplink batches + 2 downlink batches, x2 buffers x2 (payload+scales)
+    assert want == {"collective-permute": 20, "all-reduce": 2}
+    assert aggregation.expected_collectives(up, down, 1)["collective-permute"] == 5
+
+
+def test_sink_weights_static():
+    up = routing.build_relay_program(chain_slots(), 4, [3])
+    w = aggregation.sink_weights(up)
+    assert w.tolist() == [0.0, 0.0, 0.0, 4.0]  # 3 delivered + own model
+
+
+def test_relay_compression_validated():
+    up = routing.build_relay_program(chain_slots(), 4, [3])
+    with pytest.raises(ValueError, match="compression"):
+        aggregation.relay_uplink({}, up, "node", compression="topk")
+
+
+# --------------------------------------------------------------- cost oracle
+def _toy_schedule(rels, dur=2.0):
+    slots = []
+    t0 = 0.0
+    for t, r in enumerate(rels):
+        links = {
+            e: Link(range_km=1000.0, delay_s=0.01, rate_bps=1e6)
+            for e in r.edge_list()
+        }
+        slots.append(Slot(relation=r, t_index=t, start_s=t0, duration_s=dur,
+                          min_rate_bps=1e6, max_delay_s=0.01, links=links))
+        t0 += dur
+    return ContactSchedule(tdm=TDMSchedule(tuple(rels)), slots=tuple(slots))
+
+
+def test_groundseg_round_cost_span_and_traffic():
+    rels = chain_slots()
+    sched = _toy_schedule(rels)
+    up = routing.build_relay_program(rels, 4, [3])
+    down = routing.build_broadcast_program(rels, 4, [3])
+    rc = cost.groundseg_round_cost(sched, up, down, payload_bytes=1000)
+    # uplink uses slots 0..2 (span 6 s); downlink slots 1..2 (span 6 s too:
+    # window origin to end of slot 2)
+    assert rc.time_s == pytest.approx(6.0 + 6.0)
+    assert rc.bytes_on_isl == 1000 * (up.n_hops + down.n_hops)
+    assert rc.n_slots == 3 + 2
+
+
+def test_groundseg_mode_costs_on_geometry():
+    geom = orbits.WalkerDelta(total=6, planes=2, altitude_km=8062.0,
+                              inclination_deg=60.0)
+    gs = [orbits.GroundStation(0.0, 0.0), orbits.GroundStation(45.0, 120.0)]
+    plan = contact_plan.build_contact_plan(
+        geom, duration_s=geom.period_s, step_s=geom.period_s / 8,
+        ground_stations=gs, max_range_km=16_000.0,
+    )
+    sinks = range(6, plan.n_nodes)
+    mc = cost.groundseg_mode_costs(plan, sinks, 1 << 16, antennas=2)
+    assert set(mc) == {"centralized", "hierarchical", "gossip_getmeas",
+                       "gossip_get1meas"}
+    assert mc["centralized"] == mc["hierarchical"]  # ISL cost identical
+    assert mc["centralized"].bytes_on_isl > 0
+    # relay ships one payload per hop; gossip one per directed pair per slot
+    assert mc["centralized"].bytes_on_isl < mc["gossip_getmeas"].bytes_on_isl
+    assert mc["gossip_get1meas"].time_s >= mc["gossip_getmeas"].time_s
+
+
+def test_optimizer_groundseg_objective_never_worse_than_greedy():
+    from repro.constellation.optimizer import optimize_schedule
+
+    geom = orbits.WalkerDelta(total=6, planes=2, altitude_km=8062.0,
+                              inclination_deg=60.0)
+    gs = [orbits.GroundStation(10.0, 30.0)]
+    plan = contact_plan.build_contact_plan(
+        geom, duration_s=geom.period_s, step_s=geom.period_s / 8,
+        ground_stations=gs, max_range_km=16_000.0,
+    )
+    sinks = [6]
+    res = optimize_schedule(plan, antennas=2, payload_bytes=1 << 16,
+                            objective="groundseg", sinks=sinks)
+    assert res.chosen.time_s <= res.costs["greedy"].time_s
+    with pytest.raises(ValueError, match="sink"):
+        optimize_schedule(plan, objective="groundseg")
+    with pytest.raises(ValueError, match="objective"):
+        optimize_schedule(plan, objective="latency")
+
+
+# ------------------------------------------------------------ driver config
+def test_groundseg_config_validation_and_cadence():
+    with pytest.raises(ValueError, match="unknown groundseg mode"):
+        GroundSegConfig(mode="federated")
+    with pytest.raises(ValueError, match="compression"):
+        GroundSegConfig(compression="topk")
+    cent = GroundSegConfig(mode="centralized")
+    assert all(cent.pool_round(r) for r in range(5))
+    hier = GroundSegConfig(mode="hierarchical", sink_sync_every=3)
+    assert [hier.pool_round(r) for r in range(6)] == [
+        True, False, False, True, False, False,
+    ]
+    assert not GroundSegConfig(mode="hierarchical",
+                               sink_sync_every=0).pool_round(0)
+
+
+# ------------------------------------------------------------ FlatSpec cache
+def test_cached_spec_hits_on_same_layout():
+    fused.clear_spec_cache()
+    tree = {"a": jnp.zeros((3, 5)), "b": jnp.ones((7,), jnp.float16)}
+    s1 = fused.cached_spec(tree, block=64)
+    s2 = fused.cached_spec(jax.tree.map(lambda x: x + 1, tree), block=64)
+    assert s1 is s2  # same layout -> same cached object
+    stats = fused.spec_cache_stats()
+    assert stats["hits"] == 1 and stats["misses"] == 1 and stats["size"] == 1
+    # different shapes / block -> distinct specs
+    s3 = fused.cached_spec({"a": jnp.zeros((4, 5)), "b": tree["b"]}, block=64)
+    s4 = fused.cached_spec(tree, block=128)
+    assert s3 is not s1 and s4 is not s1
+    assert fused.spec_cache_stats()["size"] == 3
+    fused.clear_spec_cache()
+    assert fused.spec_cache_stats() == {"hits": 0, "misses": 0, "size": 0}
+
+
+def test_cached_spec_works_under_tracing():
+    fused.clear_spec_cache()
+    tree = {"a": jnp.arange(6, dtype=jnp.float32)}
+
+    @jax.jit
+    def roundtrip(t):
+        spec = fused.cached_spec(t, block=4)
+        return fused.unflatten_pytree(spec, fused.flatten_pytree(spec, t))
+
+    out = roundtrip(tree)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    # the concrete-input key and the tracer key coincide
+    assert fused.cached_spec(tree, block=4) is fused.cached_spec(tree, block=4)
+    assert fused.spec_cache_stats()["size"] == 1
+
+
+# ------------------------------------------------------- multidevice worker
+@pytest.mark.slow
+def test_groundseg_multidevice_suite():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}:{ROOT / 'tests'}:" + env.get(
+        "PYTHONPATH", ""
+    )
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_groundseg_worker.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1800,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, "worker failed"
+    assert "ALL-OK" in proc.stdout
