@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import pathlib
 import sys
 from typing import Dict, List, Tuple
@@ -69,12 +70,15 @@ def compare(
     metrics,
     threshold: float,
 ):
-    """Returns (failures, improvements, checked) as printable strings."""
+    """Returns (failures, improvements, checked, table) where ``table`` is
+    one per-metric delta row [bench, label, metric, base, run, delta%,
+    status] for every compared cell — the job-summary table."""
     run_by_key: Dict[Tuple, Dict] = {}
     for row in run:
         run_by_key[row_key(row, metrics)] = row
     failures: List[str] = []
     improvements: List[str] = []
+    table: List[Tuple[str, str, str, str, str, str, str]] = []
     checked = 0
     for base in baseline:
         relevant = [m for m in metrics if m in base]
@@ -86,28 +90,95 @@ def compare(
         got = run_by_key.get(key)
         if got is None:
             failures.append(f"[{bench}] {label}: row missing from run")
+            table.append((bench, label, "—", "—", "missing", "—", "FAIL"))
             continue
         for m in relevant:
             if m not in got:
                 failures.append(f"[{bench}] {label}: metric {m} missing")
+                table.append((bench, label, m, f"{float(base[m]):.6g}",
+                              "missing", "—", "FAIL"))
                 continue
             b, r = float(base[m]), float(got[m])
             checked += 1
             if b <= 0:
+                # no ratio exists at a zero baseline, but a nonzero run
+                # value IS a regression (e.g. undelivered going 0 -> 6) —
+                # the zero baselines are exactly the guarantees to keep
+                if b == 0 and r > 0:
+                    failures.append(
+                        f"[{bench}] {label}: {m} regressed from zero "
+                        f"baseline to {r:.6g}"
+                    )
+                    table.append((bench, label, m, f"{b:.6g}", f"{r:.6g}",
+                                  "—", "REGRESSED"))
+                else:
+                    table.append((bench, label, m, f"{b:.6g}", f"{r:.6g}",
+                                  "—", "ok"))
                 continue
             ratio = r / b
+            delta = f"{(ratio - 1) * 100:+.1f}%"
             if ratio > 1.0 + threshold:
                 failures.append(
                     f"[{bench}] {label}: {m} regressed "
                     f"{b:.6g} -> {r:.6g} (+{(ratio - 1) * 100:.1f}%)"
                 )
+                status = "REGRESSED"
             elif ratio < 1.0 - threshold:
                 improvements.append(
                     f"[{bench}] {label}: {m} improved "
                     f"{b:.6g} -> {r:.6g} ({(ratio - 1) * 100:.1f}%) — "
                     "consider refreshing the baseline"
                 )
-    return failures, improvements, checked
+                status = "improved"
+            else:
+                status = "ok"
+            table.append((bench, label, m, f"{b:.6g}", f"{r:.6g}", delta,
+                          status))
+    return failures, improvements, checked, table
+
+
+_TABLE_HEADER = ("bench", "cell", "metric", "baseline", "run", "delta",
+                 "status")
+
+
+def format_table(table, markdown: bool = False) -> str:
+    """Render the per-metric delta table — plain text for the job log,
+    GitHub-flavored markdown for $GITHUB_STEP_SUMMARY."""
+    rows = [_TABLE_HEADER] + [tuple(r) for r in table]
+    if markdown:
+        lines = ["| " + " | ".join(_TABLE_HEADER) + " |",
+                 "|" + "---|" * len(_TABLE_HEADER)]
+        lines += ["| " + " | ".join(r) + " |" for r in table]
+        return "\n".join(lines)
+    widths = [max(len(r[i]) for r in rows) for i in range(len(_TABLE_HEADER))]
+    lines = []
+    for i, r in enumerate(rows):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(r, widths)).rstrip())
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def write_step_summary(table, failures, improvements, checked,
+                       baseline_name: str, threshold: float) -> None:
+    """Append the delta table to the GitHub Actions job summary when
+    running inside a workflow ($GITHUB_STEP_SUMMARY set); no-op locally."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    verdict = (
+        f"❌ {len(failures)} regression(s)" if failures else "✅ no regressions"
+    )
+    body = (
+        f"### Benchmark trend vs `{baseline_name}`\n\n"
+        f"{verdict} — {checked} metric cells checked, "
+        f"{len(improvements)} improvement(s) beyond "
+        f"±{threshold * 100:.0f}%\n\n"
+        + format_table(table, markdown=True)
+        + "\n"
+    )
+    with open(path, "a") as fh:
+        fh.write(body)
 
 
 def main(argv=None) -> int:
@@ -124,9 +195,12 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
     metrics = tuple(m.strip() for m in args.metrics.split(",") if m.strip())
 
-    failures, improvements, checked = compare(
+    failures, improvements, checked, table = compare(
         load_rows(args.baseline), load_rows(args.run), metrics, args.threshold
     )
+    if table:
+        print(format_table(table))
+        print()
     for line in improvements:
         print(f"IMPROVED  {line}")
     for line in failures:
@@ -136,6 +210,10 @@ def main(argv=None) -> int:
         f"{pathlib.Path(args.baseline).name}: "
         f"{len(failures)} regression(s), {len(improvements)} improvement(s) "
         f"beyond ±{args.threshold * 100:.0f}%"
+    )
+    write_step_summary(
+        table, failures, improvements, checked,
+        pathlib.Path(args.baseline).name, args.threshold,
     )
     return 1 if failures else 0
 

@@ -16,19 +16,13 @@ import numpy as np
 
 from repro.core.gossip import (
     metropolis_weights,
-    propagation_closure,
-    schedule_mixing_matrix,
     slots_to_full_propagation,
     spectral_gap,
 )
 from repro.core.relation import Relation
 from repro.constellation.contact_plan import legacy_duty_cycle_relation
 from repro.constellation.orbits import WalkerDelta
-from repro.core.schedule import (
-    TDMSchedule,
-    hypercube_schedule,
-    ring,
-)
+from repro.core.schedule import hypercube_schedule, ring
 
 
 def measured_rounds(schedule_gen, n: int, tol: float = 1e-6, cap: int = 5000) -> int:

@@ -38,7 +38,6 @@ import pathlib
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
@@ -161,11 +160,10 @@ def measured_rows(payload_bytes, payload_leaves, leaf_elems, antennas, steps,
 
         def gossip_body(t):
             t = jax.tree.map(lambda x: x[0], t)
-            res = None
             for rel in rels:
                 if len(rel) == 0:
                     continue
-                t, res = fl.tdm_fla_round(t, rel, "node", n, fl.TDMFLAConfig())
+                t, _ = fl.tdm_fla_round(t, rel, "node", n, fl.TDMFLAConfig())
             return jax.tree.map(lambda x: x[None], t)
 
         cells = {

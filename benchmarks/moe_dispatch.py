@@ -18,7 +18,6 @@ import jax.numpy as jnp
 from repro.configs import archs
 from repro.launch.flops import program_costs
 from repro.models import moe as moe_lib
-from repro.models.config import MoEConfig
 
 
 def measure(cfg, B, S):

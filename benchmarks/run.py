@@ -11,6 +11,9 @@ the framework's own perf tables.
               time (subprocess: 8 devs)
   groundseg   ground-segment FL: centralized/hierarchical sink rounds vs
               gossip — cost oracle + measured exchange (subprocess: 8 devs)
+  pipeline    pipelined multi-window groundseg rounds: depth x window x
+              staleness throughput sweep + HLO-checked measured window
+              (subprocess: 8 devs)
   roofline    the 40-cell dry-run roofline table (reads experiments/dryrun)
 
 ``python -m benchmarks.run``            runs everything quick
@@ -94,6 +97,14 @@ def main(argv=None):
         _banner("groundseg: sink-based FL vs gossip over the same schedule")
         _subprocess_bench(
             "benchmarks.groundseg_round_time",
+            ["--full"] if args.full else ["--smoke"],
+            timeout=3600,
+        )
+
+    if want("pipeline"):
+        _banner("pipeline: pipelined multi-window groundseg round throughput")
+        _subprocess_bench(
+            "benchmarks.groundseg_pipeline",
             ["--full"] if args.full else ["--smoke"],
             timeout=3600,
         )

@@ -15,7 +15,7 @@ import argparse
 import json
 import pathlib
 
-from benchmarks.roofline import ARCH_ORDER, recompute_terms
+from benchmarks.roofline import recompute_terms
 from repro.configs import archs
 
 

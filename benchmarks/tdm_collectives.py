@@ -21,8 +21,6 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
 )
 
-import functools
-import json
 import time
 
 import jax

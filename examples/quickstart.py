@@ -8,12 +8,10 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.relation import Relation
-from repro.core.schedule import TDMSchedule, clique_multilink, round_robin_tournament
+from repro.core.schedule import clique_multilink, round_robin_tournament
 from repro.core.ptbfla_sim import run_schedule_getmeas, run_schedule_get1meas
-from repro.configs import archs
 from repro.launch import train as train_lib
 
 
@@ -37,8 +35,9 @@ def main():
     got_pair, sim_p = run_schedule_get1meas(round_robin_tournament(n), data, n)
     print(f"\ngetMeas  : 1 slot,  {sim_m.total_messages} messages")
     print(f"get1meas : {n-1} slots, {sim_p.total_messages} messages")
-    assert {p: v for s in got_multi[0].values() for p, v in s.items()} == \
-           {p: v for s in got_pair[0].values() for p, v in s.items()}
+    assert {p: v for s in got_multi[0].values() for p, v in s.items()} == {
+        p: v for s in got_pair[0].values() for p, v in s.items()
+    }
     print("same exchanged data either way (semantic equivalence)")
 
     # --- 3. train a reduced mamba2 for a few steps -------------------------

@@ -11,23 +11,18 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
 )
 
-import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import archs
 from repro.core import tdm
 from repro.core.schedule import ring
 from repro.launch import serve as serve_lib
 
 
 def main():
-    cfg = archs.smoke_cfg(archs.get("qwen3-moe-30b-a3b"))
-
     # --- batched serving ----------------------------------------------------
     srv = serve_lib.main([
         "--arch", "qwen3-moe-30b-a3b", "--smoke",

@@ -15,12 +15,17 @@ Two modes (``--mode``):
   earliest-delivery contact-graph routes, the sinks FedAvg (hierarchical:
   regional models, pooled over terrestrial backhaul every other round),
   and the global model floods back on the downlink slots.
+  ``--pipeline-depth 2`` overlaps round r's downlink with round r+1's
+  uplink inside one contact window (disjoint slot capacity);
+  ``--max-staleness K`` lets undelivered payloads persist up to K windows
+  (delivered late, they are down-weighted by the staleness decay).
 
 The topology is NOT invented: orbits are propagated, ISLs require line of
 sight past the Earth's limb and a range gate, ground links an elevation
 mask, and the slot relations come straight from the contact plan.
 
 Run:  PYTHONPATH=src python examples/train_fl_constellation.py [--mode groundseg]
+      (add --rounds 2 for the CI smoke run)
 """
 
 import os
@@ -47,7 +52,7 @@ LOCAL_STEPS = 2
 PAYLOAD_BYTES = 1 << 22     # ~4 MiB of smoke-model params per exchange
 
 
-def setup(n_sats: int, ground_stations=()):
+def setup(n_sats: int, ground_stations=(), rounds=ROUNDS):
     cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
     opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
     shape = ShapeConfig("fl", "train", 32, 4)   # per-node batch of 4 rows
@@ -59,7 +64,7 @@ def setup(n_sats: int, ground_stations=()):
     plan = contact_plan.build_contact_plan(
         geom,
         duration_s=geom.period_s,
-        step_s=geom.period_s / ROUNDS,
+        step_s=geom.period_s / max(rounds, 4),
         max_range_km=14_000.0,
         ground_stations=ground_stations,
     )
@@ -85,9 +90,9 @@ def make_batch_fn(cfg, shape, n_nodes):
     return batch_fn
 
 
-def main_tdm():
+def main_tdm(rounds=ROUNDS):
     n_sats = 8
-    cfg, opt_cfg, shape, geom, plan = setup(n_sats)
+    cfg, opt_cfg, shape, geom, plan = setup(n_sats, rounds=rounds)
     fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
     windows = plan.windows()
     est = cost.plan_cost(plan, PAYLOAD_BYTES, mode="getmeas")
@@ -117,28 +122,35 @@ def main_tdm():
     state, _ = fl_train.run_constellation_fl(
         cfg, opt_cfg, mesh, n_sats, fl_cfg, plan, state,
         make_batch_fn(cfg, shape, n_sats),
-        rounds=ROUNDS, alive=alive, on_round=on_round,
+        rounds=rounds, alive=alive, on_round=on_round,
     )
     print("done — surviving satellites converged together "
           f"(consensus {fl_train.consensus_distance(state['params']):.4f})")
 
 
-def main_groundseg():
+def main_groundseg(rounds=ROUNDS, pipeline_depth=1, max_staleness=0):
     n_sats = 6
     ground = [
         orbits.GroundStation(0.0, 0.0, name="equator"),
         orbits.GroundStation(45.0, 120.0, name="midlat"),
     ]
-    cfg, opt_cfg, shape, geom, plan = setup(n_sats, ground)
+    cfg, opt_cfg, shape, geom, plan = setup(n_sats, ground, rounds=rounds)
     n_nodes = plan.n_nodes
     sinks = frozenset(range(n_sats, n_nodes))
     fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
-    gs_cfg = fl_train.GroundSegConfig(mode="hierarchical", sink_sync_every=2)
+    gs_cfg = fl_train.GroundSegConfig(
+        mode="hierarchical", sink_sync_every=2,
+        pipeline_depth=pipeline_depth, max_staleness_windows=max_staleness,
+    )
 
-    est = cost.groundseg_mode_costs(plan, sinks, PAYLOAD_BYTES, antennas=2)
+    est = cost.groundseg_mode_costs(
+        plan, sinks, PAYLOAD_BYTES, antennas=2, pipeline_depth=pipeline_depth
+    )
     print(
         f"{n_sats} satellites + {len(ground)} ground sinks, Walker delta "
-        f"{geom.planes}-plane @ {geom.altitude_km:.0f} km:"
+        f"{geom.planes}-plane @ {geom.altitude_km:.0f} km "
+        f"(pipeline depth {pipeline_depth}, staleness horizon "
+        f"{max_staleness}):"
     )
     for mode in ("centralized", "gossip_getmeas"):
         rc = est[mode]
@@ -150,23 +162,27 @@ def main_groundseg():
     mesh = jax.make_mesh((n_nodes,), ("data",))
     state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, n_nodes)
     alive = set(range(n_nodes))
+    # lose a satellite one round before the end so at least one later round
+    # actually exercises the rerouting path (rounds=2 -> fail after round 0)
+    fail_round = min(6, rounds - 2)
 
     def on_round(log):
         print(
             f"round {log.round:2d}  sat-loss {log.loss:7.4f}  "
             f"consensus-dist {log.consensus:.4f}  "
             f"delivered {log.delivered}/{log.alive}  "
-            f"covered {log.covered}  "
+            f"covered {log.covered}  carried {log.carried}  "
+            f"dropped {log.dropped}  "
             f"{'pooled' if log.pooled else 'regional'}"
         )
-        if log.round == 6:
+        if log.round == fail_round and fail_round >= 0:
             alive.discard(2)
             print("  !! satellite 2 lost — rerouting (skip-slot semantics)")
 
     state, _ = fl_train.run_groundseg_fl(
         cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, plan, state,
         make_batch_fn(cfg, shape, n_nodes),
-        sinks=sinks, rounds=ROUNDS, alive=alive, on_round=on_round,
+        sinks=sinks, rounds=rounds, alive=alive, on_round=on_round,
         antennas=2, payload_bytes=PAYLOAD_BYTES,
     )
     survivors = [v for v in range(n_sats) if v in alive]
@@ -180,11 +196,19 @@ def main_groundseg():
 def main():
     p = argparse.ArgumentParser()
     p.add_argument("--mode", choices=("tdm", "groundseg"), default="tdm")
+    p.add_argument("--rounds", type=int, default=ROUNDS,
+                   help="FL rounds (2 for the CI smoke run)")
+    p.add_argument("--pipeline-depth", type=int, default=1, choices=(1, 2),
+                   help="groundseg: overlap round r's downlink with round "
+                        "r+1's uplink in one contact window")
+    p.add_argument("--max-staleness", type=int, default=0,
+                   help="groundseg: windows an undelivered payload persists "
+                        "before it is dropped and reported")
     args = p.parse_args()
     if args.mode == "groundseg":
-        main_groundseg()
+        main_groundseg(args.rounds, args.pipeline_depth, args.max_staleness)
     else:
-        main_tdm()
+        main_tdm(args.rounds)
 
 
 if __name__ == "__main__":

@@ -214,14 +214,55 @@ def groundseg_round_cost(
     )
 
 
+def groundseg_pipelined_cost(
+    sched: ContactSchedule,
+    uplink,
+    downlink,
+    payload_bytes: int,
+    pipeline_depth: int = 1,
+) -> RoundCost:
+    """Steady-state per-round cost of a pipelined ground-segment window.
+
+    At depth 1 the uplink and downlink traverse the window sequentially —
+    identical to :func:`groundseg_round_cost`. At depth 2 they share ONE
+    window on disjoint slot capacity, so the steady-state wall time per
+    round is the LONGER of the two program spans (the pipeline's bottleneck
+    stage), while ISL traffic and busy slots still sum — that is the
+    pipelining win the throughput benchmark measures. ``downlink=None``
+    (a depth-2 warm-up window) prices the uplink alone."""
+    up = _program_cost(sched, uplink.slot_sends, payload_bytes)
+    down = (
+        _program_cost(sched, downlink.slot_sends, payload_bytes)
+        if downlink is not None
+        else RoundCost(0.0, 0, 0, 0.0)
+    )
+    if pipeline_depth == 1:
+        return up + down
+    return RoundCost(
+        time_s=max(up.time_s, down.time_s),
+        bytes_on_isl=up.bytes_on_isl + down.bytes_on_isl,
+        n_slots=up.n_slots + down.n_slots,
+        max_slot_s=max(up.max_slot_s, down.max_slot_s),
+    )
+
+
 def groundseg_schedule_cost(
     sched: ContactSchedule,
     sinks: Iterable[int],
     payload_bytes: int,
     n_nodes: Optional[int] = None,
+    pipeline_depth: int = 1,
+    max_staleness_windows: int = 0,
 ) -> RoundCost:
     """Convenience oracle: route over ``sched`` and price the round — what
-    the schedule optimizer minimizes under ``objective="groundseg"``."""
+    the schedule optimizer minimizes under ``objective="groundseg"``.
+
+    ``pipeline_depth=2`` prices the steady-state pipelined round: the
+    multi-window router plans a warm-up window then a steady window whose
+    uplink and downlink share capacity, and the steady window's
+    :func:`groundseg_pipelined_cost` is returned. ``max_staleness_windows``
+    feeds the router so carried payloads (if the geometry strands any)
+    shape the steady window exactly as the driver would run it."""
     from repro.groundseg import routing  # lazy: groundseg imports this pkg
 
     sinks = sorted(int(s) for s in sinks)
@@ -231,10 +272,89 @@ def groundseg_schedule_cost(
             + [max(sinks, default=0)]
         ) + 1
     rels = list(sched.tdm)
-    table = routing.earliest_delivery_routes(rels, n_nodes, sinks)
-    up = routing.build_relay_program(rels, n_nodes, sinks, table=table)
-    down = routing.build_broadcast_program(rels, n_nodes, sinks)
-    return groundseg_round_cost(sched, up, down, payload_bytes)
+    if pipeline_depth == 1 and max_staleness_windows == 0:
+        table = routing.earliest_delivery_routes(rels, n_nodes, sinks)
+        up = routing.build_relay_program(rels, n_nodes, sinks, table=table)
+        down = routing.build_broadcast_program(rels, n_nodes, sinks)
+        return groundseg_round_cost(sched, up, down, payload_bytes)
+    router = routing.MultiWindowRouter(
+        n_nodes,
+        sinks,
+        max_staleness_windows=max_staleness_windows,
+        pipeline_depth=pipeline_depth,
+    )
+    router.plan_window(rels)          # warm-up (depth 2: no downlink yet)
+    wp = router.plan_window(rels)     # steady state
+    return groundseg_pipelined_cost(
+        sched, wp.uplink, wp.downlink, payload_bytes, pipeline_depth
+    )
+
+
+def groundseg_throughput(
+    sched: ContactSchedule,
+    sinks: Iterable[int],
+    n_nodes: Optional[int] = None,
+    pipeline_depth: int = 1,
+    max_staleness_windows: int = 0,
+) -> Dict[str, float]:
+    """Steady-state round throughput of the ground-segment engine.
+
+    The cadence model, from the engine's own semantics: the one-shot
+    engine (depth 1) traverses the materialized slot window TWICE per
+    round — uplink on one window, downlink on "the next identical window"
+    — so it completes one round per two window periods. The pipelined
+    engine (depth 2) packs round r's downlink and round r+1's uplink into
+    ONE traversal on disjoint slot capacity, completing one round per
+    window. Steady-state round throughput is therefore::
+
+        rounds_per_window x delivered_fraction / window_period
+
+    where ``delivered_fraction`` is the share of satellites whose payload
+    lands at a sink in the steady window (the uplink plans first, so
+    pipelining never costs deliveries; capacity contention shows up in
+    ``covered_frac`` — satellites the leftover-capacity downlink misses
+    keep their local params and catch a later flood, the usual skip-slot
+    semantics). All quantities are static functions of the schedule, so
+    this oracle is deterministic and CI-trendable.
+    """
+    from repro.groundseg import routing  # lazy: groundseg imports this pkg
+
+    sinks = sorted(int(s) for s in sinks)
+    if n_nodes is None:
+        n_nodes = max(
+            [max(s.relation.participants(), default=0) for s in sched.slots]
+            + [max(sinks, default=0)]
+        ) + 1
+    rels = list(sched.tdm)
+    n_sats = n_nodes - len(sinks)
+    router = routing.MultiWindowRouter(
+        n_nodes,
+        sinks,
+        max_staleness_windows=max_staleness_windows,
+        pipeline_depth=pipeline_depth,
+    )
+    router.plan_window(rels)          # warm-up (depth 2: no downlink yet)
+    wp = router.plan_window(rels)     # steady state
+    window_s = max(sched.span_s, 1e-9)
+    rounds_per_window = 1.0 if pipeline_depth == 2 else 0.5
+    delivered = wp.uplink.delivered_count()
+    covered = (
+        len(wp.downlink.covered - frozenset(sinks))
+        if wp.downlink is not None
+        else 0
+    )
+    delivered_frac = delivered / max(n_sats, 1)
+    return {
+        "window_s": window_s,
+        "rounds_per_window": rounds_per_window,
+        "delivered": float(delivered),
+        "delivered_frac": delivered_frac,
+        "covered": float(covered),
+        "covered_frac": covered / max(n_sats, 1),
+        "carried": float(len(wp.residual)),
+        "dropped": float(len(wp.dropped)),
+        "round_throughput_per_s": rounds_per_window * delivered_frac / window_s,
+    }
 
 
 def groundseg_mode_costs(
@@ -244,6 +364,7 @@ def groundseg_mode_costs(
     antennas=None,
     acquisition_s: float = 0.0,
     optimize: Optional[str] = None,
+    pipeline_depth: int = 1,
 ) -> Dict[str, RoundCost]:
     """The centralized-vs-decentralized scoreboard for one plan window:
 
@@ -255,6 +376,9 @@ def groundseg_mode_costs(
 
     This is the oracle ``benchmarks/groundseg_round_time.py`` sweeps and
     the schedule optimizer scores sink-based schedules with.
+    ``pipeline_depth=2`` prices the sink-based modes as pipelined rounds
+    (steady-state, see :func:`groundseg_pipelined_cost`); the gossip rows
+    are unaffected — gossip has no uplink/downlink phases to overlap.
     """
     sched = plan.schedule(
         antennas=antennas,
@@ -263,7 +387,8 @@ def groundseg_mode_costs(
         acquisition_s=acquisition_s,
     )
     central = groundseg_schedule_cost(
-        sched, sinks, payload_bytes, n_nodes=plan.n_nodes
+        sched, sinks, payload_bytes, n_nodes=plan.n_nodes,
+        pipeline_depth=pipeline_depth,
     )
     return {
         "centralized": central,

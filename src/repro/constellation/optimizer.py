@@ -165,6 +165,8 @@ def optimize_schedule(
     max_slots: Optional[int] = None,
     objective: str = "gossip",
     sinks: Optional[Iterable[int]] = None,
+    pipeline_depth: int = 1,
+    max_staleness_windows: int = 0,
 ) -> OptimizationResult:
     """Pick the cheapest feasible schedule for ``plan`` under the cost oracle.
 
@@ -178,7 +180,10 @@ def optimize_schedule(
     scores one decentralized TDM pass (``cost.schedule_cost``);
     ``"groundseg"`` scores a sink-based centralized round — uplink relays
     + downlink broadcast routed over each candidate's slots
-    (``cost.groundseg_schedule_cost``; requires ``sinks``). The
+    (``cost.groundseg_schedule_cost``; requires ``sinks``). With
+    ``pipeline_depth=2`` (and optionally ``max_staleness_windows``) the
+    groundseg objective prices the steady-state PIPELINED round, so the
+    optimizer picks the schedule whose bottleneck stage is shortest. The
     never-worse-than-greedy guarantee holds per objective, since every
     candidate is scored by the same oracle.
 
@@ -218,7 +223,9 @@ def optimize_schedule(
         candidates[name] = sched
         if objective == "groundseg":
             costs[name] = cost_lib.groundseg_schedule_cost(
-                sched, sinks, payload_bytes, n_nodes=plan.n_nodes
+                sched, sinks, payload_bytes, n_nodes=plan.n_nodes,
+                pipeline_depth=pipeline_depth,
+                max_staleness_windows=max_staleness_windows,
             )
         else:
             costs[name] = cost_lib.schedule_cost(

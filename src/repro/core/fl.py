@@ -22,8 +22,7 @@ of a Walker constellation — rather than a star or a clique.
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -33,7 +32,7 @@ import numpy as np
 from repro.core import tdm
 from repro.core.ptbfla_sim import PTBFLASimulator, _Node, _as_gen
 from repro.core.relation import Relation
-from repro.core.schedule import TDMSchedule, clique_multilink
+from repro.core.schedule import TDMSchedule
 
 
 # ===========================================================================

@@ -10,7 +10,6 @@ rate of decentralized FL over the schedule), and the propagation closure
 
 from __future__ import annotations
 
-from typing import List, Sequence
 
 import numpy as np
 

@@ -24,7 +24,6 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.relation import Relation
 from repro.core.schedule import TDMSchedule
 
 

@@ -17,7 +17,7 @@ numpy — the JAX lowering lives in :mod:`repro.core.tdm`.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterable, Iterator, List, Sequence, Set, Tuple
 
 import numpy as np

@@ -23,11 +23,9 @@ deprecated duty-cycle toy shimmed over that package.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-import numpy as np
 
 from repro.core.relation import Relation
 

@@ -25,8 +25,7 @@ are tested for bit-equivalence against the paper-faithful simulator
 
 from __future__ import annotations
 
-import functools
-from typing import List, NamedTuple, Optional, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

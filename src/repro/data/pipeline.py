@@ -14,10 +14,9 @@ only its addressable shard.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig, ShapeConfig

@@ -16,9 +16,20 @@ global model floods back out on the downlink slots.
   ppermute batch per buffer per relay slot (two for int8 via the Pallas
   ``tdm_compress`` kernels), one masked psum per buffer to pool sinks.
 
+Rounds need not be one-shot: :class:`repro.groundseg.routing.MultiWindowRouter`
+plans PIPELINED multi-window rounds (round r's downlink flood overlapping
+round r+1's uplink relay on disjoint slot capacity) with delay-tolerant
+payload persistence — a satellite that misses the sink this window still
+delivers in a later one, its payload aging until a configurable staleness
+horizon drops (and reports) it, and the sink FedAvg down-weights stale
+deliveries by ``staleness_decay ** age``
+(:func:`repro.groundseg.aggregation.pipelined_window_round`).
+
 Drivers live in :func:`repro.launch.fl_train.run_groundseg_fl`; the
 centralized-vs-decentralized cost oracle in
-:func:`repro.constellation.cost.groundseg_round_cost`.
+:func:`repro.constellation.cost.groundseg_round_cost` and the pipelined
+steady-state oracle in
+:func:`repro.constellation.cost.groundseg_pipelined_cost`.
 
 Pipeline, end to end::
 

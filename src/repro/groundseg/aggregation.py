@@ -40,7 +40,7 @@ receive side folding dequant+accumulate into one pass over the buffer.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,12 +151,39 @@ def sink_weights(program: RelayProgram) -> np.ndarray:
     return w
 
 
+def staleness_sink_weights(
+    program: RelayProgram,
+    delivered_ages: Dict[int, int],
+    decay: float,
+) -> np.ndarray:
+    """Per-sink FedAvg denominators with per-satellite staleness weighting.
+
+    A payload delivered at age ``a`` (windows since its snapshot) carries
+    weight ``decay ** a``: the carry channel multiplies a queued buffer by
+    ``decay`` once per window boundary, so by delivery the payload VALUE is
+    scaled ``decay ** a`` and this denominator matches it exactly. At age 0
+    (or ``decay == 1``) every weight is 1.0 and this reduces bit-for-bit to
+    :func:`sink_weights` — exact FedAvg."""
+    w = np.zeros((program.n_nodes,), dtype=np.float32)
+    for k, srcs in program.delivered.items():
+        total = np.float32(1.0)
+        for s in sorted(srcs):
+            # repeated f32 multiply, mirroring the per-window buffer scaling
+            ws = np.float32(1.0)
+            for _ in range(int(delivered_ages.get(s, 0))):
+                ws = np.float32(ws * np.float32(decay))
+            total = np.float32(total + ws)
+        w[k] = total
+    return w
+
+
 def sink_fedavg(
     buffers: Buffers,
     program: RelayProgram,
     axis_name: str,
     *,
     pool: bool,
+    weights: Optional[np.ndarray] = None,
 ) -> Buffers:
     """FedAvg at the sinks: regional mean of (own model + delivered sums).
 
@@ -165,10 +192,14 @@ def sink_fedavg(
     holds the identical global FedAvg (centralized mode / the hierarchical
     sync round). ``pool=False`` leaves per-sink regional models. Satellite
     buffers pass through untouched (the psum is computed everywhere, as
-    SPMD requires, but masked out of non-sink lanes)."""
+    SPMD requires, but masked out of non-sink lanes).
+
+    ``weights`` overrides the static per-node denominators (default:
+    payload counts via :func:`sink_weights`; the pipelined engine passes
+    :func:`staleness_sink_weights`)."""
     n = program.n_nodes
     idx = jax.lax.axis_index(axis_name)
-    w = sink_weights(program)
+    w = sink_weights(program) if weights is None else np.asarray(weights)
     is_sink = jnp.asarray(_mask(program.sinks, n))[idx]
     total_w = float(w.sum())
     my_w = jnp.asarray(np.maximum(w, 1.0))[idx]
@@ -230,7 +261,7 @@ def broadcast_downlink(
 
 def expected_collectives(
     uplink: RelayProgram,
-    downlink: BroadcastProgram,
+    downlink: Optional[BroadcastProgram],
     n_buckets: int,
     *,
     compression: str = "none",
@@ -239,15 +270,35 @@ def expected_collectives(
     """Static collective counts one ground-segment round lowers to — the
     oracle the HLO tests compare compiled modules against. Per ppermute
     batch: one permute per buffer (two for int8: payload + scales); plus
-    one masked psum per buffer when the sinks pool."""
+    one masked psum per buffer when the sinks pool. ``downlink=None``
+    (the first window of a depth-2 pipeline — no global model to flood
+    yet) contributes nothing; the carry/staleness channel is local
+    arithmetic and never adds a collective."""
     from repro.groundseg.routing import program_batch_count
 
     per_batch = 2 if compression == "int8" else 1
-    batches = program_batch_count(uplink) + program_batch_count(downlink)
+    batches = program_batch_count(uplink)
+    if downlink is not None:
+        batches += program_batch_count(downlink)
     return {
         "collective-permute": batches * per_batch * n_buckets,
         "all-reduce": (n_buckets if pool else 0),
     }
+
+
+def expected_window_collectives(
+    wp,
+    n_buckets: int,
+    *,
+    compression: str = "none",
+    pool: bool = True,
+) -> Dict[str, int]:
+    """:func:`expected_collectives` for a
+    :class:`~repro.groundseg.routing.WindowProgram` — the extended static
+    oracle for pipelined, delay-tolerant windows."""
+    return expected_collectives(
+        wp.uplink, wp.downlink, n_buckets, compression=compression, pool=pool
+    )
 
 
 def groundseg_round(
@@ -287,3 +338,127 @@ def groundseg_round(
     return jax.tree.map(
         lambda new, old: jnp.where(adopt, new, old), mixed, params
     )
+
+
+# ---------------------------------------------------------------------------
+# Pipelined multi-window rounds with a delay-tolerant carry channel
+# ---------------------------------------------------------------------------
+
+def stacked_zero_buffers(spec, n_nodes: int) -> Buffers:
+    """Driver-side initial state for the carry / pending-global channels:
+    one zeroed fused buffer per dtype bucket, stacked over the node axis."""
+    return {
+        b: jnp.zeros((n_nodes, spec.padded_size(b)), dtype=jnp.dtype(b))
+        for b in spec.buckets
+    }
+
+
+def pipelined_window_round(
+    params,
+    carry: Buffers,
+    pending: Buffers,
+    wp,
+    axis_name: str,
+    *,
+    pool: bool,
+    staleness_decay: float = 1.0,
+    compression: str = "none",
+    block: int = fused.DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+):
+    """One pipelined, delay-tolerant ground-segment window on fused buffers.
+
+    ``wp`` is a :class:`~repro.groundseg.routing.WindowProgram`; ``carry``
+    holds each satellite's still-queued payload buffer (zeros where none),
+    ``pending`` the previous round's global model at the sink lanes (used
+    only when ``wp.lagged_downlink``). Steps:
+
+    1. payload assembly — injecting satellites snapshot their params;
+       carriers re-offer their queued buffer scaled by ``staleness_decay``
+       (one multiply per window boundary, so a payload delivered at age
+       ``a`` arrives scaled ``decay**a``, matching
+       :func:`staleness_sink_weights` exactly); sinks offer their own model
+       as the FedAvg anchor, like the one-shot path;
+    2. uplink relay + staleness-weighted sink FedAvg (pooled per ``pool``);
+    3. the new residual carry is read off the post-relay buffers (an
+       undelivered payload never moves, so it sits at its source's lane);
+       dropped payloads simply have no residual mask — their lanes zero;
+    4. downlink — at depth 1 the just-computed global floods (identical to
+       :func:`groundseg_round`, bit-for-bit when nothing is carried); at
+       depth 2 the PREVIOUS round's global (``pending``) floods on the slot
+       capacity the uplink left free, and the new global becomes next
+       window's pending. Sinks always adopt the new global as their anchor.
+
+    Returns ``(mixed_params, new_carry, new_pending)``.
+    """
+    _check_compression(compression)
+    spec = fused.cached_spec(params, block=block)
+    pbuf = fused.flatten_pytree(spec, params)
+    n = wp.uplink.n_nodes
+    idx = jax.lax.axis_index(axis_name)
+
+    carriers = sorted(s for s, a in wp.ages.items() if a > 0)
+    if carriers:
+        offer = jnp.asarray(_mask(carriers, n))[idx]
+        decay = jnp.float32(staleness_decay)
+        payload = {
+            b: jnp.where(
+                offer,
+                (carry[b].astype(jnp.float32) * decay).astype(buf.dtype),
+                buf,
+            )
+            for b, buf in pbuf.items()
+        }
+    else:
+        payload = pbuf
+
+    post = relay_uplink(
+        payload, wp.uplink, axis_name,
+        compression=compression, block=block, quant_impl=quant_impl,
+    )
+    weights = staleness_sink_weights(
+        wp.uplink, wp.delivered_ages, staleness_decay
+    )
+    agg = sink_fedavg(post, wp.uplink, axis_name, pool=pool, weights=weights)
+
+    holds = jnp.asarray(_mask(sorted(wp.residual), n))[idx]
+    new_carry = {
+        b: jnp.where(holds, buf, jnp.zeros_like(buf))
+        for b, buf in post.items()
+    }
+
+    is_sink = jnp.asarray(_mask(wp.uplink.sinks, n))[idx]
+    new_pending = {
+        b: jnp.where(is_sink, buf, jnp.zeros_like(buf))
+        for b, buf in agg.items()
+    }
+
+    if wp.downlink is None:
+        # first window of a depth-2 pipeline: nothing to flood yet — sinks
+        # still adopt the new global as their anchor, satellites keep their
+        # locally-trained params
+        final = {
+            b: jnp.where(is_sink, agg[b], pbuf[b]) for b in pbuf
+        }
+        adopt = is_sink
+    else:
+        chan = (
+            {b: jnp.where(is_sink, pending[b], agg[b]) for b in agg}
+            if wp.lagged_downlink
+            else agg
+        )
+        out = broadcast_downlink(
+            chan, wp.downlink, axis_name,
+            compression=compression, block=block, quant_impl=quant_impl,
+        )
+        final = (
+            {b: jnp.where(is_sink, agg[b], out[b]) for b in out}
+            if wp.lagged_downlink
+            else out
+        )
+        adopt = jnp.asarray(_mask(wp.downlink.covered | wp.uplink.sinks, n))[idx]
+    mixed = fused.unflatten_pytree(spec, final)
+    new_params = jax.tree.map(
+        lambda new, old: jnp.where(adopt, new, old), mixed, params
+    )
+    return new_params, new_carry, new_pending

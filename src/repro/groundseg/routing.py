@@ -197,9 +197,12 @@ class RelayProgram:
     ``slot_sends[t]`` holds ``(src, dst)`` transfers for slot ``t`` — src
     ships its ENTIRE accumulated payload and sheds it (out-degree <= 1 per
     node per slot by construction; fan-in merges at the receiver).
-    ``delivered[k]`` is the set of source satellites whose payload lands at
-    sink ``k``; ``weights[v]`` the number of source payloads node ``v`` is
-    carrying into each sink (used as the static FedAvg denominators).
+    ``delivered[k]`` is the set of payload ids (source satellites) landing
+    at sink ``k``; ``unreachable`` the holders with no route this window;
+    ``residual[h]`` the payload ids stranded at holder ``h`` when the
+    window ends — always a subset of the unreachable holders' loads, since
+    a payload only moves along a route that delivers it within the window
+    (the delay-tolerant invariant the multi-window router relies on).
     """
 
     n_nodes: int
@@ -207,6 +210,11 @@ class RelayProgram:
     slot_sends: Tuple[Tuple[DirectedEdge, ...], ...]
     delivered: Dict[int, FrozenSet[int]]
     unreachable: FrozenSet[int]
+    residual: Dict[int, FrozenSet[int]] = None  # type: ignore[assignment]
+
+    def __post_init__(self):
+        if self.residual is None:
+            object.__setattr__(self, "residual", {})
 
     @property
     def n_hops(self) -> int:
@@ -214,6 +222,9 @@ class RelayProgram:
 
     def delivered_count(self) -> int:
         return sum(len(v) for v in self.delivered.values())
+
+    def residual_count(self) -> int:
+        return sum(len(v) for v in self.residual.values())
 
     def last_used_slot(self) -> Optional[int]:
         used = [t for t, s in enumerate(self.slot_sends) if s]
@@ -226,22 +237,43 @@ def build_relay_program(
     sinks: Iterable[int],
     sources: Optional[Iterable[int]] = None,
     table: Optional[RoutingTable] = None,
+    initial_loads: Optional[Dict[int, Iterable[int]]] = None,
 ) -> RelayProgram:
-    """Replay the routing policy with every reachable source injecting its
-    payload at slot 0, merging payloads that meet at a relay."""
+    """Replay the routing policy with every reachable holder injecting its
+    payload(s) at slot 0, merging payloads that meet at a relay.
+
+    ``initial_loads`` maps holder node -> payload ids it starts the window
+    with (default: every source holds exactly its own payload). Loads held
+    by a sink are trivially delivered; loads at holders with no route stay
+    put and come back in ``residual`` — the carry the multi-window router
+    re-schedules next window.
+    """
+    if initial_loads is not None and sources is None:
+        sources = sorted(initial_loads)
     if table is None:
         table = earliest_delivery_routes(slots, n_nodes, sinks, sources)
     sink_s = table.sinks
+    if initial_loads is None:
+        initial_loads = {
+            s: {s} for s in table.routes if s not in sink_s
+        }
     carrying: Dict[int, set] = {}
     delivered: Dict[int, set] = {k: set() for k in sorted(sink_s)}
     unreachable = set()
-    for s, route in table.routes.items():
-        if s in sink_s:
+    residual: Dict[int, set] = {}
+    for h, load in sorted(initial_loads.items()):
+        load = set(load)
+        if not load:
             continue
-        if not route.reachable:
-            unreachable.add(s)
+        if h in sink_s:
+            delivered[h] |= load            # already on the ground
             continue
-        carrying.setdefault(s, set()).add(s)
+        route = table.routes.get(h)
+        if route is None or not route.reachable:
+            unreachable.add(h)
+            residual[h] = load              # holds; re-scheduled next window
+            continue
+        carrying.setdefault(h, set()).update(load)
     slot_sends: List[Tuple[DirectedEdge, ...]] = []
     for t in range(table.n_slots):
         outgoing: Dict[int, int] = {}
@@ -263,7 +295,7 @@ def build_relay_program(
     leftover = {v for v, load in carrying.items() if load}
     assert not leftover, (
         f"relay left payloads stranded at {sorted(leftover)} — the routing "
-        "policy must deliver every reachable source inside the horizon"
+        "policy must deliver every reachable holder inside the horizon"
     )
     return RelayProgram(
         n_nodes=n_nodes,
@@ -271,6 +303,7 @@ def build_relay_program(
         slot_sends=tuple(slot_sends),
         delivered={k: frozenset(v) for k, v in delivered.items()},
         unreachable=frozenset(unreachable),
+        residual={h: frozenset(v) for h, v in residual.items()},
     )
 
 
@@ -372,3 +405,209 @@ def program_batch_count(
     """Total ppermute batches a program lowers to (per payload buffer) —
     the static count the HLO tests verify against compiled modules."""
     return sum(len(permutation_batches(s)) for s in program.slot_sends if s)
+
+
+# ---------------------------------------------------------------------------
+# Multi-window pipelined rounds with delay-tolerant payload persistence
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DroppedPayload:
+    """A payload that aged past the staleness horizon and was discarded."""
+
+    window: int     # window in which the drop happened
+    source: int     # satellite whose snapshot it was
+    age: int        # windows since the snapshot was taken (> horizon)
+
+
+@dataclass(frozen=True)
+class WindowProgram:
+    """Everything one plan window executes, statically derived.
+
+    ``uplink`` relays this window's payloads (fresh snapshots from
+    ``injected`` plus carried-over stale ones) toward the sinks;
+    ``downlink`` floods a global model back out — at pipeline depth 2 it is
+    the PREVIOUS round's global (``lagged_downlink``) riding slot capacity
+    the uplink left free, and it is ``None`` on the very first window (no
+    global exists yet). ``ages[s]`` is payload ``s``'s age in windows at
+    the start of this window (0 = snapshotted now); ``delivered_ages`` /
+    ``residual`` split it by outcome, and ``dropped`` reports payloads that
+    aged past the staleness horizon and were discarded this window.
+    """
+
+    window: int
+    uplink: RelayProgram
+    downlink: Optional[BroadcastProgram]
+    lagged_downlink: bool
+    injected: FrozenSet[int]
+    ages: Dict[int, int]
+    delivered_ages: Dict[int, int]
+    residual: Dict[int, int]
+    dropped: Dict[int, int]
+
+    def max_delivered_age(self) -> int:
+        return max(self.delivered_ages.values(), default=0)
+
+
+def remaining_capacity(
+    slots: Sequence[Relation], program: RelayProgram
+) -> List[Relation]:
+    """Each slot's relation minus the undirected edges the relay program
+    occupies — the capacity a pipelined downlink may flood over. An ISL
+    terminal busy relaying an uplink payload cannot simultaneously carry
+    the broadcast, so disjointness is per-edge per-slot."""
+    out: List[Relation] = []
+    for rel, sends in zip(slots, program.slot_sends):
+        used = {(min(s, d), max(s, d)) for s, d in sends}
+        keep = [e for e in rel.edge_list() if e not in used]
+        out.append(Relation.from_edges(keep, nodes=rel.nodes))
+    return out
+
+
+class MultiWindowRouter:
+    """Plans ground-segment windows with payloads persisting across them.
+
+    The delay-tolerant queue discipline (all static Python, so ground and
+    space compute identical plans — the paper's assumption (a)):
+
+    - every live satellite holds at most ONE pending payload: the snapshot
+      of its params taken the first window it had nothing queued. While it
+      is pending the satellite keeps training locally but does not enqueue
+      a second snapshot (the next snapshot, taken after delivery, reflects
+      all the training in between);
+    - a pending payload ages one window per boundary. Because a payload
+      only ever moves along a route that delivers it within the window
+      (reachable holders ship everything; unreachable ones hold), an
+      undelivered payload always sits at its own source — briefly
+      unreachable satellites deliver as soon as geometry allows;
+    - a payload whose age would exceed ``max_staleness_windows`` is dropped
+      AND reported (``WindowProgram.dropped``, :attr:`dropped_log`), and
+      its satellite snapshots fresh the same window;
+    - at ``pipeline_depth=2`` round r's downlink flood overlaps round
+      r+1's uplink relay inside one window, on disjoint slot capacity. The
+      uplink plans first (training updates are the scarce resource; a
+      satellite the downlink misses simply keeps its local params and
+      catches the next flood — the skip-slot semantics already tolerate
+      that), the broadcast floods over what remains.
+    """
+
+    def __init__(
+        self,
+        n_nodes: int,
+        sinks: Iterable[int],
+        *,
+        max_staleness_windows: int = 0,
+        pipeline_depth: int = 1,
+    ):
+        self.n_nodes = int(n_nodes)
+        self.sinks = frozenset(int(s) for s in sinks)
+        if not self.sinks:
+            raise ValueError("need at least one sink node")
+        if max_staleness_windows < 0:
+            raise ValueError(
+                f"max_staleness_windows must be >= 0, got {max_staleness_windows}"
+            )
+        if pipeline_depth not in (1, 2):
+            raise ValueError(
+                "pipeline_depth must be 1 (sequential uplink->downlink) or 2 "
+                f"(downlink of round r overlaps uplink of r+1), got {pipeline_depth}"
+            )
+        self.max_staleness_windows = int(max_staleness_windows)
+        self.pipeline_depth = int(pipeline_depth)
+        self._pending: Dict[int, int] = {}   # source -> age of queued payload
+        self._window = -1
+        self.dropped_log: List[DroppedPayload] = []
+
+    @property
+    def window(self) -> int:
+        """Index of the last planned window (-1 before the first)."""
+        return self._window
+
+    def pending(self) -> Dict[int, int]:
+        """Snapshot of the queued payloads (source -> age)."""
+        return dict(self._pending)
+
+    def plan_window(
+        self,
+        slots: Sequence[Relation],
+        alive: Optional[Iterable[int]] = None,
+    ) -> WindowProgram:
+        """Plan the next window over ``slots`` (restricted to ``alive``).
+
+        ``alive`` is re-read per window — the per-window rerouting
+        contract: dead satellites drop out of every slot relation, their
+        queued payloads hold (and keep aging) until they revive or the
+        staleness horizon discards them.
+        """
+        self._window += 1
+        live = (
+            set(int(v) for v in alive)
+            if alive is not None
+            else set(range(self.n_nodes))
+        )
+        live |= self.sinks
+        rels = [r.restrict(live) for r in slots]
+
+        dropped: Dict[int, int] = {}
+        if self._window > 0:
+            aged = {s: a + 1 for s, a in self._pending.items()}
+            dropped = {
+                s: a for s, a in aged.items() if a > self.max_staleness_windows
+            }
+            self._pending = {
+                s: a for s, a in aged.items() if a <= self.max_staleness_windows
+            }
+            self.dropped_log.extend(
+                DroppedPayload(window=self._window, source=s, age=a)
+                for s, a in sorted(dropped.items())
+            )
+
+        sat_ids = [v for v in range(self.n_nodes) if v not in self.sinks]
+        injected = frozenset(
+            v for v in sat_ids if v in live and v not in self._pending
+        )
+        ages = dict(self._pending)
+        ages.update({v: 0 for v in injected})
+
+        table = earliest_delivery_routes(
+            rels, self.n_nodes, self.sinks, sources=sorted(ages)
+        )
+        uplink = build_relay_program(
+            rels,
+            self.n_nodes,
+            self.sinks,
+            table=table,
+            initial_loads={v: {v} for v in sorted(ages)},
+        )
+
+        lagged = self.pipeline_depth == 2
+        if lagged:
+            downlink = (
+                None
+                if self._window == 0
+                else build_broadcast_program(
+                    remaining_capacity(rels, uplink), self.n_nodes, self.sinks
+                )
+            )
+        else:
+            downlink = build_broadcast_program(rels, self.n_nodes, self.sinks)
+
+        delivered_ids = (
+            set().union(*uplink.delivered.values())
+            if uplink.delivered
+            else set()
+        )
+        delivered_ages = {s: ages[s] for s in sorted(delivered_ids)}
+        residual = {s: ages[s] for s in sorted(ages) if s not in delivered_ids}
+        self._pending = dict(residual)
+        return WindowProgram(
+            window=self._window,
+            uplink=uplink,
+            downlink=downlink,
+            lagged_downlink=lagged,
+            injected=injected,
+            ages=ages,
+            delivered_ages=delivered_ages,
+            residual=residual,
+            dropped=dropped,
+        )

@@ -21,7 +21,6 @@ out).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

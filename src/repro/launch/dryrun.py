@@ -23,7 +23,6 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import hashlib
 import json
 import pathlib

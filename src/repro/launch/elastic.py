@@ -23,9 +23,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Set
+from typing import Dict, Iterable, Optional, Set
 
-import jax
 import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib

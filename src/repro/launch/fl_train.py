@@ -26,20 +26,18 @@ others keep training; its params re-sync through later gossip rounds.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import fl, tdm
 from repro.core.relation import Relation
-from repro.core.schedule import TDMSchedule
 from repro.models import registry
-from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.config import ModelConfig
 from repro.optim import adamw
 
 
@@ -304,6 +302,20 @@ class GroundSegConfig:
                            routes migrate between sinks as orbits advance).
     compression: relay payload encoding ('none' | 'int8' — blockwise via
                  the Pallas tdm_compress kernels, re-quantized per hop).
+    pipeline_depth: 1 — one-shot rounds: uplink then downlink traverse the
+                    window sequentially (the PR 4 path, bit-for-bit when
+                    ``max_staleness_windows == 0``). 2 — pipelined: round
+                    r's downlink flood overlaps round r+1's uplink relay
+                    inside ONE window, on disjoint slot capacity — the
+                    sink never idles and steady-state round throughput
+                    roughly doubles.
+    max_staleness_windows: delay-tolerant horizon — an undelivered payload
+                    persists (and keeps aging) this many windows before it
+                    is dropped and reported; 0 disables persistence.
+    staleness_decay: sink FedAvg weight of a payload delivered at age
+                    ``a`` is ``staleness_decay ** a`` (1.0 = pure FedAvg
+                    regardless of age; age 0 is always weight 1 — exact
+                    FedAvg recovered when nothing is stale).
     """
 
     mode: str = "centralized"
@@ -311,6 +323,9 @@ class GroundSegConfig:
     compression: str = "none"
     block: int = 1024
     quant_impl: str = "auto"
+    pipeline_depth: int = 1
+    max_staleness_windows: int = 0
+    staleness_decay: float = 0.5
 
     def __post_init__(self):
         if self.mode not in ("centralized", "hierarchical"):
@@ -320,6 +335,27 @@ class GroundSegConfig:
                 f"groundseg compression must be 'none' or 'int8', "
                 f"got {self.compression!r}"
             )
+        if self.pipeline_depth not in (1, 2):
+            raise ValueError(
+                f"pipeline_depth must be 1 or 2, got {self.pipeline_depth}"
+            )
+        if self.max_staleness_windows < 0:
+            raise ValueError(
+                f"max_staleness_windows must be >= 0, "
+                f"got {self.max_staleness_windows}"
+            )
+        if not (0.0 < self.staleness_decay <= 1.0):
+            raise ValueError(
+                f"staleness_decay must be in (0, 1], got {self.staleness_decay}"
+            )
+
+    @property
+    def pipelined(self) -> bool:
+        """Does this config need the multi-window engine? The trivial
+        config (depth 1, no persistence) routes through the PR 4 one-shot
+        path, whose numerics the pipelined engine reproduces bit-for-bit
+        (HLO-verified in tests/_groundseg_worker.py)."""
+        return self.pipeline_depth > 1 or self.max_staleness_windows > 0
 
     def pool_round(self, rnd: int) -> bool:
         """Do the sinks reconcile over backhaul this round?"""
@@ -406,6 +442,86 @@ def build_groundseg_round(
     return jax.jit(fn, donate_argnums=(0,))
 
 
+def build_pipelined_groundseg_round(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    mesh: Mesh,
+    n_nodes: int,
+    fl_cfg: FLConfig,
+    gs_cfg: GroundSegConfig,
+    wp,
+    pool: bool,
+    axis: str = "data",
+) -> Callable:
+    """One pipelined/delay-tolerant window: local training (sinks hold),
+    then :func:`repro.groundseg.aggregation.pipelined_window_round` on the
+    fused buffers. Contract: ``(stacked_state, aux, stacked_batch) ->
+    (stacked_state, aux, losses)`` where ``aux = {"carry": .., "pending":
+    ..}`` are the stacked payload-queue and pending-global buffer dicts
+    threaded across windows."""
+    from repro.groundseg import aggregation
+
+    b = registry.bundle(cfg)
+    sink_mask = np.zeros((n_nodes,), dtype=bool)
+    sink_mask[sorted(wp.uplink.sinks)] = True
+
+    def node_round(state, aux, batch):
+        state = jax.tree.map(lambda x: x[0], state)
+        aux = jax.tree.map(lambda x: x[0], aux)
+        batch = jax.tree.map(lambda x: x[0], batch)
+        idx = jax.lax.axis_index(axis)
+        is_sink = jnp.asarray(sink_mask)[idx]
+
+        def one_step(st, mb):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: b.loss_fn(p, mb), has_aux=True
+            )(st["params"])
+            new_p, new_opt, _ = adamw.apply_updates(
+                st["params"], grads, st["opt"], opt_cfg
+            )
+            return {"params": new_p, "opt": new_opt, "step": st["step"] + 1}, loss
+
+        trained = state
+        losses = []
+        for h in range(fl_cfg.local_steps):
+            mb = jax.tree.map(lambda x: x[h], batch)
+            trained, loss = one_step(trained, mb)
+            losses.append(loss)
+        local_loss = jnp.stack(losses).mean()
+        state = jax.tree.map(
+            lambda new, old: jnp.where(is_sink, old, new), trained, state
+        )
+
+        params, carry, pending = aggregation.pipelined_window_round(
+            state["params"],
+            aux["carry"],
+            aux["pending"],
+            wp,
+            axis,
+            pool=pool,
+            staleness_decay=gs_cfg.staleness_decay,
+            compression=gs_cfg.compression,
+            block=gs_cfg.block,
+            quant_impl=gs_cfg.quant_impl,
+        )
+        state = dict(state, params=params)
+        aux = {"carry": carry, "pending": pending}
+
+        state = jax.tree.map(lambda x: x[None], state)
+        aux = jax.tree.map(lambda x: x[None], aux)
+        return state, aux, local_loss[None]
+
+    spec_state = P(axis)
+    fn = shard_map(
+        node_round,
+        mesh=mesh,
+        in_specs=(spec_state, spec_state, spec_state),
+        out_specs=(spec_state, spec_state, P(axis)),
+        check_rep=False,  # same reason as build_fl_round (+ pallas int8 path)
+    )
+    return jax.jit(fn, donate_argnums=(0, 1))
+
+
 @dataclasses.dataclass(frozen=True)
 class GroundSegRoundLog:
     round: int
@@ -416,6 +532,9 @@ class GroundSegRoundLog:
     unreachable: int     # live satellites with no route to any sink
     alive: int           # live satellites
     pooled: bool         # sinks reconciled over backhaul this round
+    carried: int = 0     # payloads persisting to the next window
+    dropped: int = 0     # payloads discarded past the staleness horizon
+    max_age: int = 0     # oldest delivered payload's age (windows)
 
 
 def run_groundseg_fl(
@@ -456,6 +575,16 @@ def run_groundseg_fl(
     Routing, relay and broadcast programs, and the compiled round are
     cached per (alive-set, pool-flag) — orbital periodicity makes revisits
     cache hits. Returns ``(state, [GroundSegRoundLog, ...])``.
+
+    When ``gs_cfg.pipelined`` (``pipeline_depth == 2`` and/or
+    ``max_staleness_windows > 0``) the multi-window engine drives the loop
+    instead: a :class:`repro.groundseg.routing.MultiWindowRouter` re-plans
+    each window from the live set, undelivered payloads persist in a carry
+    buffer across windows (dropped and reported past the staleness
+    horizon), and at depth 2 round r's downlink overlaps round r+1's
+    uplink on disjoint slot capacity. The compiled-window cache is keyed by
+    (alive set, payload ages, pool, downlink presence) — steady state
+    revisits the same few keys.
     """
     from repro.groundseg import routing
 
@@ -470,6 +599,11 @@ def run_groundseg_fl(
     )
     base_rels = list(sched.tdm)
     sat_ids = [v for v in range(n_nodes) if v not in sinks_s]
+    if gs_cfg.pipelined:
+        return _run_groundseg_pipelined(
+            cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, base_rels, state,
+            batch_fn, sinks_s, sat_ids, rounds, alive, on_round, log_every,
+        )
     # routing depends only on the alive set; the compiled round also on the
     # pool flag — two caches so hierarchical pool/regional alternation does
     # not redo the DP and program replay
@@ -516,6 +650,91 @@ def run_groundseg_fl(
             unreachable=len(up.unreachable),
             alive=len(live_sats),
             pooled=pool,
+        )
+        logs.append(log)
+        if on_round is not None:
+            on_round(log)
+    return state, logs
+
+
+def _run_groundseg_pipelined(
+    cfg: ModelConfig,
+    opt_cfg,
+    mesh: Mesh,
+    n_nodes: int,
+    fl_cfg: FLConfig,
+    gs_cfg: GroundSegConfig,
+    base_rels,
+    state: Any,
+    batch_fn: Callable[[int], Any],
+    sinks_s,
+    sat_ids,
+    rounds: int,
+    alive: Optional[set],
+    on_round: Optional[Callable[[GroundSegRoundLog], None]],
+    log_every: int,
+):
+    """The multi-window loop behind :func:`run_groundseg_fl`: one window
+    per round, payload queues persisting in device-side carry buffers, the
+    previous round's global staged in a pending buffer when pipelining."""
+    from repro.core import fused
+    from repro.groundseg import aggregation, routing
+
+    router = routing.MultiWindowRouter(
+        n_nodes,
+        sinks_s,
+        max_staleness_windows=gs_cfg.max_staleness_windows,
+        pipeline_depth=gs_cfg.pipeline_depth,
+    )
+    node_params = jax.tree.map(lambda x: x[0], state["params"])
+    spec = fused.cached_spec(node_params, block=gs_cfg.block)
+    aux = {
+        "carry": aggregation.stacked_zero_buffers(spec, n_nodes),
+        "pending": aggregation.stacked_zero_buffers(spec, n_nodes),
+    }
+    fn_cache: Dict[Any, Any] = {}
+    logs: list = []
+    for rnd in range(rounds):
+        live = set(alive) if alive is not None else set(range(n_nodes))
+        live |= sinks_s
+        pool = gs_cfg.pool_round(rnd)
+        wp = router.plan_window(base_rels, alive=live)
+        key = (
+            frozenset(live),
+            tuple(sorted(wp.ages.items())),
+            pool,
+            wp.downlink is None,
+        )
+        if key not in fn_cache:
+            fn_cache[key] = build_pipelined_groundseg_round(
+                cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, wp, pool
+            )
+        state, aux, losses = fn_cache[key](state, aux, batch_fn(rnd))
+        live_sats = [v for v in sat_ids if v in live]
+        log_this = log_every > 0 and rnd % log_every == 0
+        if log_this and live_sats:
+            loss_v = float(np.mean(np.asarray(losses)[live_sats]))
+            cons_v = consensus_distance(
+                jax.tree.map(lambda x: np.asarray(x)[live_sats], state["params"])
+            )
+        else:
+            loss_v = cons_v = float("nan")
+        log = GroundSegRoundLog(
+            round=rnd,
+            loss=loss_v,
+            consensus=cons_v,
+            delivered=wp.uplink.delivered_count(),
+            covered=(
+                len(wp.downlink.covered - sinks_s)
+                if wp.downlink is not None
+                else 0
+            ),
+            unreachable=len(wp.uplink.unreachable),
+            alive=len(live_sats),
+            pooled=pool,
+            carried=len(wp.residual),
+            dropped=len(wp.dropped),
+            max_age=wp.max_delivered_age(),
         )
         logs.append(log)
         if on_round is not None:

@@ -23,11 +23,9 @@ in §Roofline use it together with XLA's (per-body) numbers.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict
+from dataclasses import dataclass
 
 import jax
-import numpy as np
 from jax import core as jcore
 
 
@@ -148,7 +146,6 @@ def jaxpr_costs(jaxpr: jcore.Jaxpr) -> Costs:
             continue
         if prim == "custom_vjp_call":
             # fwd costs only; bwd shows up in the grad jaxpr itself
-            fn = eqn.params.get("fwd_jaxpr_thunk")
             call = eqn.params.get("call_jaxpr")
             if call is not None:
                 total += jaxpr_costs(call.jaxpr)

@@ -132,9 +132,6 @@ def collective_stats(hlo_text: str, details: Optional[list] = None) -> Collectiv
         comps = {"__all__": [l.strip() for l in hlo_text.splitlines()]}
         entry = "__all__"
 
-    # effective trip multiplier per computation, found by a pre-pass
-    multipliers: Dict[str, float] = defaultdict(float)
-
     memo: Dict[str, Tuple[Dict[str, float], Dict[str, float], int]] = {}
 
     def visit(name: str, stack=()) -> Tuple[Dict[str, float], Dict[str, float], int]:

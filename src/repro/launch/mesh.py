@@ -12,7 +12,7 @@ and the TDM relation schedules their exchanges.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

@@ -29,17 +29,15 @@ receive zero gradient.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.launch import sharding as shlib
-from repro.models import registry, transformer
-from repro.models.config import ModelConfig, ShapeConfig
+from repro.models import transformer
+from repro.models.config import ModelConfig
 from repro.models.layers import embed_tokens, lm_logits, rmsnorm
 from repro.optim import adamw
 
@@ -65,7 +63,6 @@ def build_pp_train_step(
 
     ``state`` must be built from cfg_padded (extra inert units)."""
     cfgp, u_real, u_loc = padded_cfg(cfg, n_stages)
-    b = registry.bundle(cfgp)
 
     def pipeline_hidden(params, tokens, positions):
         """Run the pipe; returns last-stage hidden states (M, Bm, S, D)."""

@@ -11,16 +11,14 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import archs
-from repro.launch import steps as steps_lib
 from repro.models import registry
-from repro.models.config import ShapeConfig
 
 
 @dataclasses.dataclass

@@ -7,15 +7,12 @@ models themselves never see the mesh (logical axes only).
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.data import pipeline
 from repro.launch import sharding as shlib
 from repro.models import registry
 from repro.models.config import ModelConfig, ShapeConfig

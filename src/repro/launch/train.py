@@ -15,12 +15,10 @@ Examples (CPU):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.configs import archs

@@ -20,7 +20,6 @@ same spec; ``naive_attention`` here is the semantic oracle for both.
 from __future__ import annotations
 
 import functools
-import math
 from dataclasses import dataclass
 from typing import Optional, Tuple
 

@@ -10,8 +10,7 @@ it; the launch layer lowers it for a mesh.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional, Tuple
 
 

@@ -15,13 +15,13 @@ heads Hm = di / P share B/C within each of the G groups.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.launch.sharding import shard_activation
-from repro.models.config import MambaConfig, ModelConfig
+from repro.models.config import ModelConfig
 from repro.models.layers import dtype_of, rmsnorm, truncated_normal
 
 
@@ -35,7 +35,6 @@ def init_mamba(key, cfg: ModelConfig) -> Tuple[Dict, Dict]:
     di = mb.d_inner(D)
     Hm = mb.n_heads(D)
     G, N, K = mb.n_groups, mb.d_state, mb.d_conv
-    conv_dim = di + 2 * G * N
     dt = dtype_of(cfg.param_dtype)
     ks = jax.random.split(key, 8)
     std = D ** -0.5
@@ -109,7 +108,6 @@ def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 def conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
     """Single decode step. x_t: (B,C); conv_state: (B,K-1,C). Returns
     (out (B,C), new_state)."""
-    K = w.shape[0]
     window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
     out = jnp.einsum("bkc,kc->bc", window, w) + b[None, :]
     return out, window[:, 1:, :]
@@ -125,7 +123,6 @@ class MambaCache(NamedTuple):
 
 
 def _project(p: Dict, x: jax.Array, cfg: ModelConfig):
-    mb = cfg.mamba
     cdt = x.dtype
     z = jnp.einsum("bsd,di->bsi", x, p["wz"].astype(cdt))
     xc = jnp.einsum("bsd,di->bsi", x, p["wx"].astype(cdt))

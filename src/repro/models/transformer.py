@@ -22,8 +22,6 @@ encoder KV. Decode scans units with the stacked cache as scan xs/ys.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from dataclasses import dataclass
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
@@ -38,7 +36,7 @@ from repro.models.attention import (
     flash_attention_decode,
     flash_attention_train,
 )
-from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.config import ModelConfig
 from repro.models.layers import (
     apply_mrope,
     apply_rope,
@@ -339,7 +337,6 @@ def encoder_forward(params: Params, enc_embeds: jax.Array, cfg: ModelConfig) -> 
     h = enc_embeds.astype(dtype_of(cfg.compute_dtype))
     B, F, _ = h.shape
     positions = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
-    desc = LayerDesc("attn", ffn="dense")
 
     def body(h, p):
         hn = rmsnorm(h, p["ln"], cfg.norm_eps)

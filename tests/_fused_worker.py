@@ -13,7 +13,6 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
-import functools
 import random
 import sys
 

@@ -293,6 +293,187 @@ def test_dead_satellite_skip_slot():
     check("dead satellite dropped from routing; survivors aggregated", True)
 
 
+# ---------------------------------------------------------------------------
+# 6. pipelined multi-window engine: bit-identity at the trivial config,
+#    HLO counts == the extended static oracle, delay-tolerant staleness
+#    numerics, and the pipelined driver end to end
+# ---------------------------------------------------------------------------
+def _shard3(body):
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=(P("node"),) * 3,
+        out_specs=(P("node"),) * 3, check_rep=False,
+    ))
+
+
+def _window_fn(wp, pool=True, decay=0.5, compression="none"):
+    def body(t, c, p):
+        t = jax.tree.map(lambda x: x[0], t)
+        c = jax.tree.map(lambda x: x[0], c)
+        p = jax.tree.map(lambda x: x[0], p)
+        out, nc, npend = aggregation.pipelined_window_round(
+            t, c, p, wp, "node", pool=pool, staleness_decay=decay,
+            compression=compression, quant_impl="ref",
+        )
+        return tuple(
+            jax.tree.map(lambda x: x[None], z) for z in (out, nc, npend)
+        )
+
+    return _shard3(body)
+
+
+def _zero_aux(tree):
+    from repro.core import fused
+
+    spec = fused.build_spec(jax.tree.map(lambda x: x[0], tree))
+    return (aggregation.stacked_zero_buffers(spec, N),
+            aggregation.stacked_zero_buffers(spec, N))
+
+
+def test_pipelined_bit_identical_at_trivial_config():
+    # depth 1, staleness 0: the pipelined engine must reproduce the PR 4
+    # one-shot path BIT-FOR-BIT (same relay, same weights, same flood)
+    slots = [
+        Relation.from_edges([(0, 1), (2, 6), (4, 5)], nodes=range(N)),
+        Relation.from_edges([(1, 6), (5, 7), (3, 4)], nodes=range(N)),
+        Relation.from_edges([(4, 7), (3, 6)], nodes=range(N)),
+    ]
+    up = routing.build_relay_program(slots, N, SINKS)
+    down = routing.build_broadcast_program(slots, N, SINKS)
+    router = routing.MultiWindowRouter(N, SINKS)
+    wp = router.plan_window(slots)
+    rng = np.random.default_rng(3)
+    tree = {"w": jnp.asarray(rng.normal(size=(N, 129)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(N, 7)).astype(np.float32))}
+    for pool in (True, False):
+        def old_body(t, pool=pool):
+            t = jax.tree.map(lambda x: x[0], t)
+            out = aggregation.groundseg_round(t, up, down, "node", pool=pool)
+            return jax.tree.map(lambda x: x[None], out)
+
+        f_old = jax.jit(shard_map(
+            old_body, mesh=mesh, in_specs=(P("node"),), out_specs=P("node"),
+            check_rep=False,
+        ))
+        carry, pend = _zero_aux(tree)
+        y_old = f_old(tree)
+        y_new, nc, _ = _window_fn(wp, pool=pool)(tree, carry, pend)
+        for k in tree:
+            assert np.array_equal(np.asarray(y_old[k]), np.asarray(y_new[k])), (
+                pool, k,
+            )
+        assert all(not np.asarray(v).any() for v in nc.values())
+    check("pipelined engine bit-identical to the one-shot path at "
+          "depth 1 / staleness 0 (pooled and regional)", True)
+
+
+def test_pipelined_hlo_collective_counts():
+    _, plan = walker_plan()
+    sched = plan.schedule(antennas=2)
+    rels = list(sched.tdm)
+    router = routing.MultiWindowRouter(
+        N, SINKS, max_staleness_windows=2, pipeline_depth=2
+    )
+    wp0 = router.plan_window(rels)   # warm-up: no downlink
+    wp1 = router.plan_window(rels)   # steady: lagged downlink
+    rng = np.random.default_rng(0)
+    tree = {
+        f"w{i}": jnp.asarray(rng.normal(size=(N,) + s).astype(np.float32))
+        for i, s in enumerate([(3, 5), (17,), (128,), (33,)])
+    }
+    carry, pend = _zero_aux(tree)
+    for wp in (wp0, wp1):
+        for compression in ("none", "int8"):
+            for pool in (True, False):
+                fn = _window_fn(wp, pool=pool, compression=compression)
+                stats = collective_stats(
+                    fn.lower(tree, carry, pend).compile().as_text()
+                )
+                want = aggregation.expected_window_collectives(
+                    wp, 1, compression=compression, pool=pool
+                )
+                for kind, count in want.items():
+                    got = stats.count_by_kind.get(kind, 0)
+                    assert got == count, (
+                        wp.window, compression, pool, kind, got, count,
+                    )
+    check("HLO: pipelined window collectives == extended static oracle "
+          "(warm-up + steady, none/int8, pooled/regional)", True)
+
+
+def test_stale_delivery_numerics():
+    # satellite 2 unreachable for exactly K windows, then delivers: the
+    # sink FedAvg must include its ORIGINAL snapshot weighted decay**K
+    K, DECAY = 2, 0.5
+    iso = [Relation.from_edges(
+        [(0, 6), (1, 6), (3, 6), (4, 7), (5, 7)], nodes=range(N)
+    )]
+    full = [Relation.from_edges(
+        [(0, 6), (1, 6), (2, 6), (3, 6), (4, 7), (5, 7)], nodes=range(N)
+    )]
+    router = routing.MultiWindowRouter(N, SINKS, max_staleness_windows=K)
+    rng = np.random.default_rng(7)
+    tree = {"w": jnp.asarray(rng.normal(size=(N, 64)).astype(np.float32))}
+    x0 = np.asarray(tree["w"]).copy()
+    carry, pend = _zero_aux(tree)
+    state = tree
+    wps = []
+    for w in range(K + 1):
+        wp = router.plan_window(iso if w < K else full)
+        wps.append(wp)
+        state, carry, pend = _window_fn(wp, decay=DECAY)(state, carry, pend)
+    last = wps[-1]
+    assert last.delivered_ages[2] == K     # delivered at exactly the horizon
+    assert not last.dropped
+    # replay the weighted averages in numpy (params only change via floods)
+    cur = x0.copy()
+    for wp in wps:
+        w = aggregation.staleness_sink_weights(wp.uplink, wp.delivered_ages,
+                                               DECAY)
+        num = sum(
+            (DECAY ** wp.ages[s]) * (x0[s] if s == 2 else cur[s])
+            for s in sorted(wp.delivered_ages)
+        ) + cur[6] + cur[7]
+        g = num / w.sum()
+        for v in sorted(wp.downlink.covered | wp.uplink.sinks):
+            cur[v] = g
+    got = np.asarray(state["w"])
+    np.testing.assert_allclose(got[6], cur[6], atol=1e-5)
+    # beyond the horizon the payload is dropped, never delivered
+    router2 = routing.MultiWindowRouter(N, SINKS, max_staleness_windows=1)
+    for w in range(3):
+        wp = router2.plan_window(iso)
+    assert wp.dropped == {2: 2}
+    assert router2.dropped_log[0].source == 2
+    check(f"stale delivery at exactly K={K} windows lands with weight "
+          f"decay^K; past-horizon payloads drop and report", True)
+
+
+def test_pipelined_fl_end_to_end():
+    geom, plan = walker_plan()
+    cfg, opt_cfg, fl_cfg, fl_mesh, batch_fn = _fl_setup()
+    gs_cfg = fl_train.GroundSegConfig(
+        mode="centralized", pipeline_depth=2, max_staleness_windows=2,
+    )
+    state = fl_train._stack_init(jax.random.PRNGKey(0), cfg, opt_cfg, N)
+    state, logs = fl_train.run_groundseg_fl(
+        cfg, opt_cfg, fl_mesh, N, fl_cfg, gs_cfg, plan, state, batch_fn,
+        sinks=SINKS, rounds=3, antennas=2,
+    )
+    assert all(np.isfinite(log.loss) for log in logs)
+    assert logs[0].covered == 0            # warm-up window: no global yet
+    assert all(log.delivered == N_SATS for log in logs)
+    assert all(log.covered == N_SATS for log in logs[1:])
+    assert all(log.dropped == 0 for log in logs)
+    # pipelined + centralized: after a steady-state round every covered
+    # satellite holds the PREVIOUS round's global — all identical lanes
+    for leaf in jax.tree.leaves(state["params"]):
+        arr = np.asarray(leaf)
+        for v in range(1, N_SATS):
+            assert np.array_equal(arr[0], arr[v])
+    check("pipelined depth-2 FL end to end: warm-up then steady coverage, "
+          "satellites in exact consensus on the lagged global", True)
+
+
 if __name__ == "__main__":
     test_router_full_delivery()
     test_hlo_relay_collective_counts()
@@ -300,4 +481,8 @@ if __name__ == "__main__":
     test_hierarchical_fl_converges()
     test_centralized_exact_consensus_on_covered()
     test_dead_satellite_skip_slot()
+    test_pipelined_bit_identical_at_trivial_config()
+    test_pipelined_hlo_collective_counts()
+    test_stale_delivery_numerics()
+    test_pipelined_fl_end_to_end()
     print("ALL-OK")

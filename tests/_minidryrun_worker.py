@@ -11,14 +11,9 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
 )
 
-import sys
 
-import jax
-import numpy as np
 
 from repro.configs import archs
-from repro.launch import sharding as shlib
-from repro.launch import steps as steps_lib
 from repro.launch.dryrun import analyze, lower_cell
 from repro.launch.mesh import make_mesh
 from repro.models.config import ShapeConfig

@@ -19,20 +19,14 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import compress as compress_lib
 from repro.core import fl, tdm
 from repro.core.gossip import metropolis_weights, schedule_mixing_matrix
 from repro.core.ptbfla_sim import run_schedule_getmeas
 from repro.core.relation import Relation
-from repro.core.schedule import (
-    TDMSchedule,
-    clique_multilink,
-    hypercube_schedule,
-    round_robin_tournament,
-)
+from repro.core.schedule import TDMSchedule, hypercube_schedule
 
 N = 8
 mesh = Mesh(np.array(jax.devices()[:N]), ("node",))

@@ -5,11 +5,10 @@ would silently skew every reported number."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_stats
-from repro.launch.flops import Costs, jaxpr_costs, program_costs
+from repro.launch.flops import program_costs
 
 
 # ------------------------------------------------------------ flops walker

@@ -9,8 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import archs
-from repro.models import registry, transformer
-from repro.models.config import ShapeConfig
+from repro.models import registry
 
 ARCH_NAMES = list(archs.ARCHS.keys())
 

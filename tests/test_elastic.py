@@ -3,13 +3,11 @@ policy, TDM rescheduling, and elastic reshard-on-restore across DIFFERENT
 mesh shapes (the new job's mesh != the mesh that saved)."""
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint as ckpt_lib
-from repro.core.relation import Relation
 from repro.core.schedule import round_robin_tournament
 from repro.launch.elastic import HealthTracker, SlotDeadline, reschedule
 

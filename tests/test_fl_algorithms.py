@@ -9,12 +9,7 @@ from repro.core.gossip import metropolis_weights, spectral_gap
 from repro.core.relation import Relation
 from repro.constellation.contact_plan import legacy_duty_cycle_relation
 from repro.constellation.orbits import WalkerDelta
-from repro.core.schedule import (
-    TDMSchedule,
-    clique_multilink,
-    hypercube_schedule,
-    round_robin_tournament,
-)
+from repro.core.schedule import TDMSchedule, hypercube_schedule
 from proptest import given, st_int
 
 
@@ -80,8 +75,6 @@ def test_tdm_fla_consensus_over_walker(seed):
     )
     n = 12
     init = {i: np.array([float(i), -float(i)]) for i in range(n)}
-
-    Ws = {}
 
     def mix(own, peers):
         # mirror of collective Metropolis mixing, done with plain numpy

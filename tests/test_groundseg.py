@@ -293,6 +293,226 @@ def test_cached_spec_works_under_tracing():
     assert fused.spec_cache_stats()["size"] == 1
 
 
+# ------------------------------------- multi-window pipelined + delay-tolerant
+def test_relay_program_initial_loads_and_residual():
+    # holder 1 carries {0, 1} (a merged carry from an earlier window);
+    # holder 2 is isolated -> its load must come back as residual
+    slots = [Relation.from_edges([(1, 3)], nodes=range(4))]
+    up = routing.build_relay_program(
+        slots, 4, [3], initial_loads={1: {0, 1}, 2: {2}}
+    )
+    assert up.delivered == {3: frozenset({0, 1})}
+    assert up.residual == {2: frozenset({2})}
+    assert up.unreachable == frozenset({2})
+    assert up.residual_count() == 1
+    # loads starting AT a sink are trivially delivered
+    up2 = routing.build_relay_program(
+        slots, 4, [3], initial_loads={3: {0}, 1: {1}}
+    )
+    assert up2.delivered == {3: frozenset({0, 1})}
+
+
+def _iso_then_connected(n=4):
+    """Window A: sat 2 isolated; window B: everyone reaches sink 3."""
+    win_a = [Relation.from_edges([(0, 3), (1, 3)], nodes=range(n))]
+    win_b = [Relation.from_edges([(0, 3), (1, 3), (2, 3)], nodes=range(n))]
+    return win_a, win_b
+
+
+def test_multiwindow_carry_and_stale_delivery():
+    win_a, win_b = _iso_then_connected()
+    router = routing.MultiWindowRouter(4, [3], max_staleness_windows=2)
+    wp_a = router.plan_window(win_a)
+    assert sorted(wp_a.injected) == [0, 1, 2]
+    assert wp_a.delivered_ages == {0: 0, 1: 0}
+    assert wp_a.residual == {2: 0}           # queued, age 0
+    wp_b = router.plan_window(win_b)
+    assert sorted(wp_b.injected) == [0, 1]   # 2 still has a pending payload
+    assert wp_b.ages[2] == 1                 # aged one window boundary
+    assert wp_b.delivered_ages[2] == 1       # delivered stale
+    assert wp_b.residual == {} and router.pending() == {}
+    assert wp_b.max_delivered_age() == 1
+
+
+def test_multiwindow_delivery_at_exact_horizon_then_drop_beyond():
+    win_a, win_b = _iso_then_connected()
+    # unreachable for exactly max_staleness_windows, then delivers: KEPT
+    router = routing.MultiWindowRouter(4, [3], max_staleness_windows=2)
+    router.plan_window(win_a)
+    router.plan_window(win_a)
+    wp = router.plan_window(win_b)
+    assert wp.delivered_ages[2] == 2 and wp.dropped == {}
+    # one window beyond the horizon: DROPPED, reported, fresh re-snapshot
+    router2 = routing.MultiWindowRouter(4, [3], max_staleness_windows=2)
+    for _ in range(3):
+        router2.plan_window(win_a)
+    wp3 = router2.plan_window(win_a)
+    assert wp3.dropped == {2: 3}
+    assert router2.dropped_log == [
+        routing.DroppedPayload(window=3, source=2, age=3)
+    ]
+    assert wp3.ages[2] == 0                  # re-snapshotted the same window
+
+
+def test_multiwindow_staleness_zero_matches_one_shot_programs():
+    # depth 1, horizon 0: every window's programs equal the PR 4 one-shot
+    # builders — the static half of the bit-identical guarantee
+    rels = chain_slots()
+    router = routing.MultiWindowRouter(4, [3], max_staleness_windows=0)
+    up_ref = routing.build_relay_program(rels, 4, [3])
+    down_ref = routing.build_broadcast_program(rels, 4, [3])
+    for _ in range(3):
+        wp = router.plan_window(rels)
+        assert wp.uplink.slot_sends == up_ref.slot_sends
+        assert wp.uplink.delivered == up_ref.delivered
+        assert wp.downlink.slot_sends == down_ref.slot_sends
+        assert all(a == 0 for a in wp.ages.values())
+
+
+def test_pipelined_window_capacity_is_disjoint():
+    rels = [
+        Relation.from_edges([(0, 1), (2, 3), (1, 3)], nodes=range(4)),
+        Relation.from_edges([(0, 3), (1, 2), (1, 3)], nodes=range(4)),
+    ]
+    router = routing.MultiWindowRouter(4, [3], pipeline_depth=2,
+                                       max_staleness_windows=1)
+    wp0 = router.plan_window(rels)
+    assert wp0.downlink is None and wp0.lagged_downlink
+    wp1 = router.plan_window(rels)
+    assert wp1.downlink is not None
+    for up_s, down_s in zip(wp1.uplink.slot_sends, wp1.downlink.slot_sends):
+        up_e = {(min(a, b), max(a, b)) for a, b in up_s}
+        down_e = {(min(a, b), max(a, b)) for a, b in down_s}
+        assert not (up_e & down_e)
+    # remaining_capacity really removed the uplink's edges
+    rem = routing.remaining_capacity(rels, wp1.uplink)
+    for t, rel in enumerate(rem):
+        used = {(min(a, b), max(a, b)) for a, b in wp1.uplink.slot_sends[t]}
+        assert not (set(rel.edge_list()) & used)
+
+
+def test_multiwindow_router_validation():
+    with pytest.raises(ValueError, match="sink"):
+        routing.MultiWindowRouter(4, [])
+    with pytest.raises(ValueError, match="max_staleness_windows"):
+        routing.MultiWindowRouter(4, [3], max_staleness_windows=-1)
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        routing.MultiWindowRouter(4, [3], pipeline_depth=3)
+
+
+def test_dead_holder_keeps_payload_until_revival():
+    win_a, win_b = _iso_then_connected()
+    router = routing.MultiWindowRouter(4, [3], max_staleness_windows=3)
+    router.plan_window(win_b)                     # all delivered fresh
+    wp = router.plan_window(win_b, alive={0, 1})  # sat 2 dies AFTER snapshot?
+    # dead and nothing pending -> no snapshot, nothing queued
+    assert 2 not in wp.ages
+    # now: alive but occluded (snapshots), then dies holding the payload
+    wp_a = router.plan_window(win_a)
+    assert wp_a.residual == {2: 0}
+    wp_dead = router.plan_window(win_b, alive={0, 1})
+    assert wp_dead.ages[2] == 1                  # queued payload keeps aging
+    assert wp_dead.residual == {2: 1}            # dead holder: no route, holds
+    wp_back = router.plan_window(win_b)
+    assert wp_back.delivered_ages[2] == 2        # delivers once revived
+
+
+def test_staleness_sink_weights_math():
+    up = routing.build_relay_program(chain_slots(), 4, [3])
+    # all ages 0 -> identical to the unweighted denominators (exact FedAvg)
+    w0 = aggregation.staleness_sink_weights(up, {}, decay=0.5)
+    assert np.array_equal(w0, aggregation.sink_weights(up))
+    w = aggregation.staleness_sink_weights(up, {0: 2, 1: 1}, decay=0.5)
+    assert w[3] == pytest.approx(1.0 + 0.25 + 0.5 + 1.0)
+    # decay 1.0: ages never change the weights
+    w1 = aggregation.staleness_sink_weights(up, {0: 7, 2: 3}, decay=1.0)
+    assert np.array_equal(w1, aggregation.sink_weights(up))
+
+
+def test_expected_collectives_without_downlink():
+    up = routing.build_relay_program(chain_slots(), 4, [3])
+    down = routing.build_broadcast_program(chain_slots(), 4, [3])
+    with_down = aggregation.expected_collectives(up, down, 2)
+    without = aggregation.expected_collectives(up, None, 2, pool=False)
+    assert without["collective-permute"] < with_down["collective-permute"]
+    assert without["all-reduce"] == 0
+    router = routing.MultiWindowRouter(4, [3], pipeline_depth=2)
+    wp0 = router.plan_window(chain_slots())
+    assert aggregation.expected_window_collectives(wp0, 2, pool=False) == without
+
+
+def test_groundseg_pipelined_cost_depth_semantics():
+    rels = chain_slots()
+    sched = _toy_schedule(rels)
+    up = routing.build_relay_program(rels, 4, [3])
+    down = routing.build_broadcast_program(rels, 4, [3])
+    d1 = cost.groundseg_pipelined_cost(sched, up, down, 1000, pipeline_depth=1)
+    assert d1 == cost.groundseg_round_cost(sched, up, down, 1000)
+    d2 = cost.groundseg_pipelined_cost(sched, up, down, 1000, pipeline_depth=2)
+    assert d2.time_s == pytest.approx(6.0)       # max of the spans, not sum
+    assert d2.bytes_on_isl == d1.bytes_on_isl    # traffic still sums
+    warm = cost.groundseg_pipelined_cost(sched, up, None, 1000, pipeline_depth=2)
+    assert warm.time_s == pytest.approx(6.0)
+
+
+def _meo_plan(planes=2, per=3, steps=8):
+    geom = orbits.WalkerDelta(total=planes * per, planes=planes,
+                              altitude_km=8062.0, inclination_deg=60.0)
+    gs = [orbits.GroundStation(0.0, 0.0), orbits.GroundStation(45.0, 120.0)]
+    plan = contact_plan.build_contact_plan(
+        geom, duration_s=geom.period_s, step_s=geom.period_s / steps,
+        ground_stations=gs,
+        max_range_km=2.0 * (orbits.R_EARTH_KM + 8062.0),
+    )
+    return geom, plan, list(range(geom.total, plan.n_nodes))
+
+
+def test_pipeline_throughput_at_least_1_5x_on_meo_shell():
+    # the acceptance bar: depth-2 steady-state round throughput >= 1.5x
+    # depth 1 on the benchmark MEO sweep cells (deterministic oracle)
+    for planes, per in [(2, 3), (2, 4)]:
+        for steps in (8, 12):
+            geom, plan, sinks = _meo_plan(planes, per, steps)
+            sched = plan.schedule(antennas=2, payload_bytes=1 << 20)
+            t1 = cost.groundseg_throughput(
+                sched, sinks, n_nodes=plan.n_nodes, pipeline_depth=1
+            )
+            t2 = cost.groundseg_throughput(
+                sched, sinks, n_nodes=plan.n_nodes, pipeline_depth=2,
+                max_staleness_windows=2,
+            )
+            ratio = (t2["round_throughput_per_s"]
+                     / max(t1["round_throughput_per_s"], 1e-12))
+            assert ratio >= 1.5, (planes, per, steps, ratio)
+            # the win must not come from dropping deliveries
+            assert t2["delivered"] >= t1["delivered"]
+
+
+def test_optimizer_pipelined_groundseg_never_worse():
+    from repro.constellation.optimizer import optimize_schedule
+
+    geom, plan, sinks = _meo_plan(2, 3, 8)
+    res = optimize_schedule(
+        plan, antennas=2, payload_bytes=1 << 16, objective="groundseg",
+        sinks=sinks, pipeline_depth=2, max_staleness_windows=1,
+    )
+    assert res.chosen.time_s <= res.costs["greedy"].time_s
+
+
+def test_groundseg_config_pipeline_validation():
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        GroundSegConfig(pipeline_depth=3)
+    with pytest.raises(ValueError, match="max_staleness_windows"):
+        GroundSegConfig(max_staleness_windows=-1)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        GroundSegConfig(staleness_decay=0.0)
+    with pytest.raises(ValueError, match="staleness_decay"):
+        GroundSegConfig(staleness_decay=1.5)
+    assert not GroundSegConfig().pipelined
+    assert GroundSegConfig(pipeline_depth=2).pipelined
+    assert GroundSegConfig(max_staleness_windows=1).pipelined
+
+
 # ------------------------------------------------------- multidevice worker
 @pytest.mark.slow
 def test_groundseg_multidevice_suite():

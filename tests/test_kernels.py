@@ -235,7 +235,6 @@ def test_quant_kernel_matches_ref(n, block):
 def test_quant_padding_roundtrip(shape):
     """Non-multiple sizes are padded and exactly un-padded."""
     x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
-    q, s, _ = None, None, None
     qq, ss, shp = q_ops.quantize_payload(x, block=64, interpret=True)
     back = q_ops.dequantize_payload(qq, ss, tuple(shape), block=64, interpret=True)
     assert back.shape == tuple(shape)

@@ -2,7 +2,6 @@
 floor): getMeas semantics, timeSlotsMap reorder buffer, skip-slot, get1meas
 pairwise limitation, and data propagation (paper P2) across schedules."""
 
-import numpy as np
 import pytest
 
 from repro.core.gossip import propagation_closure

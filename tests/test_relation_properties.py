@@ -1,8 +1,6 @@
 """Property tests for the paper's §II theoretical foundation (P1–P5)."""
 
-import itertools
 
-import numpy as np
 import pytest
 
 from repro.core.relation import Relation
@@ -79,8 +77,6 @@ def test_p2_propagation_is_valid_exchange(r1, r2):
 @given(st_relation(max_nodes=8), st_relation(max_nodes=8), st_relation(max_nodes=8), cases=60)
 def test_p2_composition_associative(r1, r2, r3):
     """Composition of relations is associative (paper §II.B)."""
-    left = r1.compose(r2).compose(r3)
-    right = r1.compose(r2.compose(r3))
     # NOTE: Relation.compose drops self-pairs at each stage (exchange
     # semantics); compare against raw relational composition on pairs.
     def raw_compose(p1, p2):

@@ -1,9 +1,7 @@
 """Tests for TDM schedules: round-robin, edge coloring, antenna budgets,
 Walker constellations, hypercube gossip."""
 
-import itertools
 
-import numpy as np
 import pytest
 
 from repro.core.relation import Relation

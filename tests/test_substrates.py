@@ -1,6 +1,5 @@
 """Tests for optimizer, data pipeline, and checkpointing substrates."""
 
-import pathlib
 
 import jax
 import jax.numpy as jnp
@@ -12,7 +11,7 @@ from repro.data import pipeline
 from repro.models.config import ShapeConfig
 from repro.configs import archs
 from repro.optim import adamw
-from proptest import given, st_int
+from proptest import given
 
 
 # ------------------------------------------------------------------ adamw
@@ -128,7 +127,7 @@ def test_checkpoint_roundtrip(tmp_path):
 def test_checkpoint_async_and_prune(tmp_path):
     tree = {"w": jnp.ones((4,))}
     for s in range(5):
-        t = ckpt_lib.save(tmp_path, s, tree, keep=2)
+        ckpt_lib.save(tmp_path, s, tree, keep=2)
     ckpt_lib.wait_all()
     assert ckpt_lib.all_steps(tmp_path) == [3, 4]
     assert ckpt_lib.latest_step(tmp_path) == 4

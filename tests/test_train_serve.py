@@ -2,13 +2,11 @@
 restart is bit-exact) and the batched server."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.launch import serve as serve_lib
 from repro.launch import train as train_lib
-from repro.configs import archs
 
 
 @pytest.mark.slow
