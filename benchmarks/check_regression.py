@@ -57,11 +57,33 @@ def row_key(row: Dict, metrics) -> Tuple:
     )
 
 
+def _load_one(path: pathlib.Path) -> List[Dict]:
+    data = json.loads(path.read_text())
+    if isinstance(data, dict) and isinstance(data.get("rows"), list):
+        # a benchmarks/run.py --out-dir summary: {"bench", "rows", "telemetry"}
+        return data["rows"]
+    if isinstance(data, list):
+        return data
+    raise SystemExit(
+        f"{path}: expected a json list of BENCH rows or a "
+        "BENCH_<name>.json summary object"
+    )
+
+
 def load_rows(path: str) -> List[Dict]:
-    rows = json.loads(pathlib.Path(path).read_text())
-    if not isinstance(rows, list):
-        raise SystemExit(f"{path}: expected a json list of BENCH rows")
-    return rows
+    """Rows from a ``--out`` list, a ``BENCH_<name>.json`` summary, or a
+    DIRECTORY of summaries (``benchmarks/run.py --out-dir``) — directory
+    rows are concatenated, so one baseline dir can trend a whole run."""
+    p = pathlib.Path(path)
+    if p.is_dir():
+        files = sorted(p.glob("BENCH_*.json")) or sorted(p.glob("*.json"))
+        if not files:
+            raise SystemExit(f"{path}: no BENCH_*.json files in directory")
+        rows: List[Dict] = []
+        for f in files:
+            rows.extend(_load_one(f))
+        return rows
+    return _load_one(p)
 
 
 def compare(

@@ -39,6 +39,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import telemetry
 from repro.core import fl, tdm
 from repro.core.relation import Relation
 from repro.core.schedule import ring
@@ -121,15 +122,19 @@ def build_round_fn(mesh, rel, cfg):
 def measure(fn, tree, reps: int):
     # time the AOT executable itself — fn(tree) would re-trace and compile
     # a second copy through the jit dispatch cache
-    compiled = fn.lower(tree).compile()
+    rec = telemetry.get_recorder()
+    with rec.span("bench.compile", cat="compile"):
+        compiled = fn.lower(tree).compile()
     stats = collective_stats(compiled.as_text())
     out = compiled(tree)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = compiled(tree)
-    jax.block_until_ready(out)
-    wall = (time.perf_counter() - t0) / reps
+    with rec.span("bench.measure", cat="bench", reps=reps):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = compiled(tree)
+        jax.block_until_ready(out)
+        wall = (time.perf_counter() - t0) / reps
+    rec.counter("bench.measured_cells")
     return stats, wall
 
 
@@ -139,8 +144,17 @@ def main(argv=None):
     p.add_argument("--full", action="store_true", help="paper-size sweeps")
     p.add_argument("--reps", type=int, default=None)
     p.add_argument("--out", default=None, help="write BENCH rows as json")
+    p.add_argument("--trace", default=None,
+                   help="write a Chrome trace (Perfetto) of this run")
     args = p.parse_args(argv)
+    with telemetry.trace_scope(args.trace):
+        rows = _main(args)
+        print("TELEMETRY " + json.dumps(telemetry.counters_snapshot()),
+              flush=True)
+    return rows
 
+
+def _main(args):
     if args.smoke:
         models = [(12, 1 << 10), "mamba2-780m"]
         rel_names = ["ring", "clique"]

@@ -46,6 +46,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import telemetry
 from repro.constellation import contact_plan, cost, orbits
 from repro.groundseg import aggregation, routing
 from repro.launch.hlo_stats import collective_stats
@@ -166,15 +167,19 @@ def delay_tolerance_rows(payload, antennas, altitude, steps, staleness):
 # ---------------------------------------------------------------------------
 
 def measure(fn, args, reps):
-    compiled = fn.lower(*args).compile()
+    rec = telemetry.get_recorder()
+    with rec.span("bench.compile", cat="compile"):
+        compiled = fn.lower(*args).compile()
     stats = collective_stats(compiled.as_text())
     out = compiled(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = compiled(*args)
-    jax.block_until_ready(out)
-    wall = (time.perf_counter() - t0) / reps
+    with rec.span("bench.measure", cat="bench", reps=reps):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = compiled(*args)
+        jax.block_until_ready(out)
+        wall = (time.perf_counter() - t0) / reps
+    rec.counter("bench.measured_cells")
     return stats, wall
 
 
@@ -262,8 +267,17 @@ def main(argv=None):
     p.add_argument("--payload-mib", type=float, default=4.0)
     p.add_argument("--reps", type=int, default=None)
     p.add_argument("--out", default=None, help="write BENCH rows as json")
+    p.add_argument("--trace", default=None,
+                   help="write a Chrome trace (Perfetto) of this run")
     args = p.parse_args(argv)
+    with telemetry.trace_scope(args.trace):
+        rows = _main(args)
+        print("TELEMETRY " + json.dumps(telemetry.counters_snapshot()),
+              flush=True)
+    return rows
 
+
+def _main(args):
     if args.smoke:
         shells, steps_list, stales, reps = QUICK_SHELLS, [8], [0, 2], 3
         leaves, elems = 8, 1 << 10

@@ -18,11 +18,20 @@ the framework's own perf tables.
 
 ``python -m benchmarks.run``            runs everything quick
 ``python -m benchmarks.run --only fig3 --full``
+
+``--out-dir DIR`` writes one machine-readable ``BENCH_<name>.json`` per
+benchmark: ``{"bench": name, "rows": [...], "telemetry": {...}}`` where
+``rows`` are the benchmark's ``BENCH {json}`` lines and ``telemetry`` the
+flight-recorder counters of the run (``check_regression.py`` accepts the
+files, or the whole directory, as ``--run``).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
+import io
+import json
 import os
 import pathlib
 import subprocess
@@ -33,7 +42,86 @@ def _banner(name: str):
     print(f"\n{'='*72}\n== {name}\n{'='*72}", flush=True)
 
 
-def _subprocess_bench(module: str, extra_args=(), timeout: int = 1200):
+def _parse_lines(lines):
+    """Pull ``BENCH {json}`` rows and ``TELEMETRY {json}`` counters out of a
+    benchmark's output lines."""
+    rows, counters = [], {}
+    for line in lines:
+        if line.startswith("BENCH "):
+            try:
+                rows.append(json.loads(line[len("BENCH "):]))
+            except json.JSONDecodeError:
+                pass
+        elif line.startswith("TELEMETRY "):
+            try:
+                counters.update(json.loads(line[len("TELEMETRY "):]))
+            except json.JSONDecodeError:
+                pass
+    return rows, counters
+
+
+def _write_summary(out_dir, name, rows, counters):
+    if out_dir is None:
+        return
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{name}.json"
+    path.write_text(json.dumps(
+        {"bench": name, "rows": rows, "telemetry": counters}, indent=1
+    ))
+    print(f"wrote {path} ({len(rows)} rows, "
+          f"{len(counters)} telemetry counters)", flush=True)
+
+
+class _Tee(io.TextIOBase):
+    """Pass stdout through while keeping a copy for BENCH-line parsing."""
+
+    def __init__(self, stream):
+        self.stream = stream
+        self.captured: list = []
+        self._buf = ""
+
+    def write(self, s):
+        self.stream.write(s)
+        self._buf += s
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            self.captured.append(line)
+        return len(s)
+
+    def flush(self):
+        self.stream.flush()
+
+    def finish(self):
+        if self._buf:
+            self.captured.append(self._buf)
+            self._buf = ""
+        return self.captured
+
+
+def _inproc_bench(name: str, fn, out_dir):
+    """Run an in-process benchmark under its own flight-recorder scope,
+    tee its stdout, and write the BENCH_<name>.json summary."""
+    tee = _Tee(sys.stdout)
+    counters = {}
+    try:
+        from repro import telemetry
+    except ImportError:
+        telemetry = None
+    with contextlib.redirect_stdout(tee):
+        if telemetry is None:
+            fn()
+        else:
+            with telemetry.record_scope():
+                fn()
+                counters = telemetry.counters_snapshot()
+    rows, printed = _parse_lines(tee.finish())
+    counters.update(printed)
+    _write_summary(out_dir, name, rows, counters)
+
+
+def _subprocess_bench(module: str, extra_args=(), timeout: int = 1200,
+                      name: str = None, out_dir=None):
     """Run a benchmark module in its own process (needed when it forces its
     own XLA device count, which locks at first jax init)."""
     root = pathlib.Path(__file__).resolve().parents[1]
@@ -47,43 +135,66 @@ def _subprocess_bench(module: str, extra_args=(), timeout: int = 1200):
     if proc.returncode != 0:
         print(proc.stderr)
         raise SystemExit(f"{module} failed")
+    rows, counters = _parse_lines(proc.stdout.splitlines())
+    _write_summary(out_dir, name or module.rsplit(".", 1)[-1], rows, counters)
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
     p.add_argument("--full", action="store_true", help="paper-size sweeps")
+    p.add_argument(
+        "--out-dir", default=None,
+        help="write one BENCH_<name>.json (rows + telemetry counters) per "
+             "benchmark into this directory",
+    )
     args = p.parse_args(argv)
     want = lambda n: args.only is None or args.only == n
+    out_dir = args.out_dir
 
     if want("fig3"):
         _banner("fig3: paper Fig.3 — TDM primitive scaling over a clique")
         from benchmarks import fig3_tdm_scaling
-        fig3_tdm_scaling.main(["--full"] if args.full else [])
+        _inproc_bench(
+            "fig3",
+            lambda: fig3_tdm_scaling.main(["--full"] if args.full else []),
+            out_dir,
+        )
 
     if want("constellation"):
         _banner("constellation: geometry-driven round time / ISL traffic sweep")
         from benchmarks import constellation_round_time
-        constellation_round_time.main(["--full"] if args.full else [])
+        _inproc_bench(
+            "constellation",
+            lambda: constellation_round_time.main(
+                ["--full"] if args.full else []
+            ),
+            out_dir,
+        )
 
     if want("optimizer"):
         _banner("optimizer: greedy vs rate-aware TDM schedules")
         from benchmarks import schedule_optimizer
-        schedule_optimizer.main(["--full"] if args.full else [])
+        _inproc_bench(
+            "optimizer",
+            lambda: schedule_optimizer.main(["--full"] if args.full else []),
+            out_dir,
+        )
 
     if want("gossip"):
         _banner("gossip: consensus speed per TDM topology (paper P2)")
         from benchmarks import gossip_convergence
-        gossip_convergence.main([])
+        _inproc_bench("gossip", lambda: gossip_convergence.main([]), out_dir)
 
     if want("moe"):
         _banner("moe: dispatch useful-FLOPs vs capacity factor")
         from benchmarks import moe_dispatch
-        moe_dispatch.main([])
+        _inproc_bench("moe", lambda: moe_dispatch.main([]), out_dir)
 
     if want("tdm"):
         _banner("tdm: collective bytes of get1meas / getMeas / int8 (8 devices)")
-        _subprocess_bench("benchmarks.tdm_collectives")
+        _subprocess_bench("benchmarks.tdm_collectives", name="tdm",
+                          out_dir=out_dir)
 
     if want("fused"):
         _banner("fused: flat-buffer exchange engine vs per-leaf (8 devices)")
@@ -91,6 +202,8 @@ def main(argv=None):
             "benchmarks.fused_exchange",
             ["--full"] if args.full else ["--smoke"],
             timeout=3600,
+            name="fused",
+            out_dir=out_dir,
         )
 
     if want("groundseg"):
@@ -99,6 +212,8 @@ def main(argv=None):
             "benchmarks.groundseg_round_time",
             ["--full"] if args.full else ["--smoke"],
             timeout=3600,
+            name="groundseg",
+            out_dir=out_dir,
         )
 
     if want("pipeline"):
@@ -107,6 +222,8 @@ def main(argv=None):
             "benchmarks.groundseg_pipeline",
             ["--full"] if args.full else ["--smoke"],
             timeout=3600,
+            name="pipeline",
+            out_dir=out_dir,
         )
 
     if want("roofline"):
@@ -114,7 +231,9 @@ def main(argv=None):
         from benchmarks import roofline
         d = pathlib.Path("experiments/dryrun")
         if (d / "single").exists():
-            roofline.main(["--mesh", "single"])
+            _inproc_bench(
+                "roofline", lambda: roofline.main(["--mesh", "single"]), out_dir
+            )
         else:
             print("experiments/dryrun/single missing — run "
                   "`python -m repro.launch.dryrun --mesh single` first")

@@ -204,11 +204,24 @@ def main():
     p.add_argument("--max-staleness", type=int, default=0,
                    help="groundseg: windows an undelivered payload persists "
                         "before it is dropped and reported")
+    p.add_argument("--trace", default=None,
+                   help="write a Chrome trace (Perfetto) of this run, plus "
+                        "a <trace>.metrics.json counter snapshot")
     args = p.parse_args()
-    if args.mode == "groundseg":
-        main_groundseg(args.rounds, args.pipeline_depth, args.max_staleness)
-    else:
-        main_tdm(args.rounds)
+    from repro import telemetry
+
+    with telemetry.trace_scope(args.trace) as rec:
+        if args.mode == "groundseg":
+            main_groundseg(args.rounds, args.pipeline_depth, args.max_staleness)
+        else:
+            main_tdm(args.rounds)
+        if args.trace:
+            telemetry.write_metrics(f"{args.trace}.metrics.json", rec)
+        counters = telemetry.counters_snapshot()
+        if counters:
+            print("telemetry counters:")
+            for name in sorted(counters):
+                print(f"  {name} = {counters[name]:g}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro import telemetry
 from repro.constellation import cost as cost_lib
 from repro.constellation.contact_plan import (
     AntennaSpec,
@@ -235,6 +236,22 @@ def optimize_schedule(
     for name in names:
         if costs[name].time_s < costs[best].time_s:
             best = name
+    # flight-recorder note of the race outcome: every candidate's cost,
+    # the winner, and its margin over the greedy baseline
+    rec = telemetry.get_recorder()
+    rec.counter("optimizer.races")
+    rec.counter(f"optimizer.winner.{best}")
+    greedy_t = costs["greedy"].time_s
+    best_t = costs[best].time_s
+    rec.event(
+        "optimizer.race",
+        cat="optimizer",
+        objective=objective,
+        winner=best,
+        costs_s={n: costs[n].time_s for n in names},
+        margin_vs_greedy_s=greedy_t - best_t,
+        speedup=(greedy_t / best_t) if best_t > 0 else 1.0,
+    )
     winner = candidates[best]
     if max_slots is not None and len(winner) > max_slots:
         winner = ContactSchedule(

@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core import tdm
 from repro.core.relation import Relation
+from repro.telemetry import recorder as telemetry
 from repro.kernels.tdm_compress import ref as q_ref
 from repro.kernels.tdm_compress import tdm_compress as q_kernel
 
@@ -130,9 +131,11 @@ def build_spec(params: Any, block: int = DEFAULT_BLOCK) -> FlatSpec:
 # and FL loops re-trace the same model layout for every distinct topology —
 # re-deriving the layout per compile is pure waste. Bounded FIFO cache;
 # keys hold treedefs and shape tuples only (no arrays, so no device memory).
+# Hit/miss stats live on the flight recorder (per run scope, so benchmark
+# and test runs cannot leak counts into each other) under this prefix.
 _SPEC_CACHE: Dict[Any, FlatSpec] = {}
 _SPEC_CACHE_MAX = 128
-_SPEC_CACHE_STATS = {"hits": 0, "misses": 0}
+SPEC_CACHE_COUNTER = "fused.spec_cache"
 
 
 def _spec_key(params: Any, block: int):
@@ -152,25 +155,34 @@ def cached_spec(params: Any, block: int = DEFAULT_BLOCK) -> FlatSpec:
     the key never touches values, so one layout derivation serves every
     (re)trace of the same model."""
     key = _spec_key(params, block)
+    rec = telemetry.get_recorder()
     spec = _SPEC_CACHE.get(key)
     if spec is None:
-        _SPEC_CACHE_STATS["misses"] += 1
+        rec.counter(f"{SPEC_CACHE_COUNTER}.misses")
         spec = build_spec(params, block=block)
         if len(_SPEC_CACHE) >= _SPEC_CACHE_MAX:
             _SPEC_CACHE.pop(next(iter(_SPEC_CACHE)))
         _SPEC_CACHE[key] = spec
     else:
-        _SPEC_CACHE_STATS["hits"] += 1
+        rec.counter(f"{SPEC_CACHE_COUNTER}.hits")
     return spec
 
 
 def spec_cache_stats() -> Dict[str, int]:
-    return dict(_SPEC_CACHE_STATS, size=len(_SPEC_CACHE))
+    """Hit/miss counts of the ACTIVE run scope (the layout cache itself is
+    process-wide; its stats are per-recorder so runs don't leak into each
+    other — see :mod:`repro.telemetry.recorder`)."""
+    rec = telemetry.get_recorder()
+    return {
+        "hits": int(rec.get_counter(f"{SPEC_CACHE_COUNTER}.hits")),
+        "misses": int(rec.get_counter(f"{SPEC_CACHE_COUNTER}.misses")),
+        "size": len(_SPEC_CACHE),
+    }
 
 
 def clear_spec_cache() -> None:
     _SPEC_CACHE.clear()
-    _SPEC_CACHE_STATS.update(hits=0, misses=0)
+    telemetry.get_recorder().pop_counters(SPEC_CACHE_COUNTER)
 
 
 def flatten_pytree(spec: FlatSpec, params: Any) -> Dict[str, jax.Array]:

@@ -498,6 +498,7 @@ class MultiWindowRouter:
         *,
         max_staleness_windows: int = 0,
         pipeline_depth: int = 1,
+        dropped_log_max: int = 1024,
     ):
         self.n_nodes = int(n_nodes)
         self.sinks = frozenset(int(s) for s in sinks)
@@ -512,11 +513,26 @@ class MultiWindowRouter:
                 "pipeline_depth must be 1 (sequential uplink->downlink) or 2 "
                 f"(downlink of round r overlaps uplink of r+1), got {pipeline_depth}"
             )
+        if dropped_log_max < 0:
+            raise ValueError(
+                f"dropped_log_max must be >= 0, got {dropped_log_max}"
+            )
         self.max_staleness_windows = int(max_staleness_windows)
         self.pipeline_depth = int(pipeline_depth)
         self._pending: Dict[int, int] = {}   # source -> age of queued payload
         self._window = -1
+        # dropped_log keeps the MOST RECENT dropped_log_max drop records (a
+        # long-running router must not grow without bound); dropped_total
+        # keeps the exact lifetime count regardless of trimming.
+        self.dropped_log_max = int(dropped_log_max)
         self.dropped_log: List[DroppedPayload] = []
+        self.dropped_total: int = 0
+
+    def reset_dropped_log(self) -> List[DroppedPayload]:
+        """Drain the retained drop records (``dropped_total`` keeps the
+        lifetime count). Returns the drained entries, oldest first."""
+        out, self.dropped_log = self.dropped_log, []
+        return out
 
     @property
     def window(self) -> int:
@@ -557,10 +573,13 @@ class MultiWindowRouter:
             self._pending = {
                 s: a for s, a in aged.items() if a <= self.max_staleness_windows
             }
+            self.dropped_total += len(dropped)
             self.dropped_log.extend(
                 DroppedPayload(window=self._window, source=s, age=a)
                 for s, a in sorted(dropped.items())
             )
+            if len(self.dropped_log) > self.dropped_log_max:
+                del self.dropped_log[: len(self.dropped_log) - self.dropped_log_max]
 
         sat_ids = [v for v in range(self.n_nodes) if v not in self.sinks]
         injected = frozenset(

@@ -34,6 +34,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import telemetry
 from repro.core import fl, tdm
 from repro.core.relation import Relation
 from repro.models import registry
@@ -140,7 +141,11 @@ class RoundFnCache:
 
     Time-varying schedules revisit topologies (orbits are periodic), so the
     jit cache is keyed on the relation's pair set — each distinct topology
-    compiles once, every revisit is a cache hit.
+    compiles once, every revisit is a cache hit. Misses and hits land on
+    the flight recorder (``fl.round_cache.*`` counters plus a ``retrace``
+    event); in reconcile mode each miss is ahead-of-time compiled via
+    :func:`repro.telemetry.compile_and_check` so the cached executable is
+    the one the collective oracle verified.
     """
 
     def __init__(
@@ -156,12 +161,61 @@ class RoundFnCache:
         self.n_nodes = n_nodes
         self.axis = axis
         self._fns: Dict[Any, Callable] = {}
+        self._expected: Dict[Any, Optional[Dict[str, int]]] = {}
 
-    def __call__(self, rel: Relation) -> Callable:
+    def expected_collectives(
+        self, rel: Relation, state: Any
+    ) -> Optional[Dict[str, int]]:
+        """Static per-round collective oracle for ``rel``, memoized on the
+        cache key. ``None`` when no proven oracle covers the config (only
+        the fused getMeas TDM path has one; mixed-dtype compressed params
+        are out of scope — the scale/index sidecar count is per FLOAT
+        bucket, not per bucket)."""
         key = tuple(sorted(rel.pairs))
-        if key not in self._fns:
-            self._fns[key] = build_fl_round(*self.args, rel, axis=self.axis)
-        return self._fns[key]
+        if key in self._expected:
+            return self._expected[key]
+        fl_cfg = self.args[4]
+        exp: Optional[Dict[str, int]] = None
+        if fl_cfg.mode == "tdm" and fl_cfg.fused and fl_cfg.comm == "getmeas":
+            # dtype buckets of the fused spec, without touching device
+            # values (no slicing — counters must stay sync-free)
+            n_buckets = len(
+                {leaf.dtype.name for leaf in jax.tree.leaves(state["params"])}
+            )
+            if fl_cfg.compression == "none" or n_buckets == 1:
+                exp = telemetry.expected_tdm_collectives(
+                    rel, n_buckets, compression=fl_cfg.compression
+                )
+        self._expected[key] = exp
+        return exp
+
+    def __call__(self, rel: Relation, example_args=None) -> Callable:
+        key = tuple(sorted(rel.pairs))
+        rec = telemetry.get_recorder()
+        fn = self._fns.get(key)
+        if fn is None:
+            rec.counter("fl.round_cache.misses")
+            rec.event(
+                "retrace",
+                cat="compile",
+                kind="fl_round",
+                links=len(rel) // 2,
+                cache_size=len(self._fns),
+            )
+            fn = build_fl_round(*self.args, rel, axis=self.axis)
+            if rec.reconcile and example_args is not None:
+                with rec.span("fl.compile", cat="compile", links=len(rel) // 2):
+                    fn = telemetry.compile_and_check(
+                        fn,
+                        example_args,
+                        self.expected_collectives(rel, example_args[0]),
+                        context=f"fl_round[{len(rel) // 2} links]",
+                        recorder=rec,
+                    )
+            self._fns[key] = fn
+        else:
+            rec.counter("fl.round_cache.hits")
+        return fn
 
     def __len__(self) -> int:
         return len(self._fns)
@@ -198,13 +252,40 @@ def run_tdm_rounds(
     and long runs don't want; skipped rounds log NaN metrics and never touch
     device values, so rounds stay async-dispatchable. ``log_every=0``
     disables metrics entirely.
+
+    Telemetry: every round bumps default-on flight-recorder counters
+    (``fl.rounds``, cache hit/miss, the oracle's per-round collective
+    counts) — host-side dict updates only, no extra device syncs. With
+    tracing on, each round also records a ``cat="slot"`` span whose wall
+    time is made accurate by a ``block_until_ready`` sync (tracing-only,
+    so untraced runs stay async-dispatchable).
     """
+    rec = telemetry.get_recorder()
     n_nodes = cache.n_nodes
     logs = []
     for rnd, rel in enumerate(relations):
         live = set(alive) if alive is not None else set(range(n_nodes))
         rel_t = rel.restrict(live)
-        state, losses = cache(rel_t)(state, batch_fn(rnd))
+        batch = batch_fn(rnd)
+        with rec.span(
+            "fl.round",
+            cat="slot",
+            round=rnd,
+            links=len(rel_t) // 2,
+            alive=len(live),
+        ):
+            fn = cache(
+                rel_t,
+                example_args=(state, batch) if rec.reconcile else None,
+            )
+            state, losses = fn(state, batch)
+            if rec.tracing:
+                jax.block_until_ready((state, losses))
+        rec.counter("fl.rounds")
+        expected = cache.expected_collectives(rel_t, state)
+        if expected:
+            for kind, count in expected.items():
+                rec.counter(f"fl.collectives.{kind}", count)
         log_this = log_every > 0 and rnd % log_every == 0
         log = RoundLog(
             round=rnd,
@@ -267,12 +348,15 @@ def run_constellation_fl(
     if optimize is None:
         relations = plan.relations()
     else:
-        sched = plan.schedule(
-            antennas=antennas,
-            payload_bytes=payload_bytes,
-            optimize=optimize,
-            acquisition_s=acquisition_s,
-        )
+        with telemetry.get_recorder().span(
+            "fl.build_schedule", cat="schedule", optimize=optimize
+        ):
+            sched = plan.schedule(
+                antennas=antennas,
+                payload_bytes=payload_bytes,
+                optimize=optimize,
+                acquisition_s=acquisition_s,
+            )
         relations = list(sched.tdm)
         if not relations:
             relations = plan.relations()
@@ -607,8 +691,15 @@ def run_groundseg_fl(
     # routing depends only on the alive set; the compiled round also on the
     # pool flag — two caches so hierarchical pool/regional alternation does
     # not redo the DP and program replay
+    from repro.groundseg import aggregation
+
+    rec = telemetry.get_recorder()
+    n_buckets = len(
+        {leaf.dtype.name for leaf in jax.tree.leaves(state["params"])}
+    )
     prog_cache: Dict[Any, Any] = {}
     fn_cache: Dict[Any, Any] = {}
+    exp_cache: Dict[Any, Dict[str, int]] = {}
     logs: list = []
     for rnd in range(rounds):
         live = set(alive) if alive is not None else set(range(n_nodes))
@@ -616,22 +707,76 @@ def run_groundseg_fl(
         pool = gs_cfg.pool_round(rnd)
         live_key = frozenset(live)
         if live_key not in prog_cache:
-            rels = [r.restrict(live) for r in base_rels]
-            table = routing.earliest_delivery_routes(
-                rels, n_nodes, sinks_s, sources=[v for v in sat_ids if v in live]
+            rec.counter("groundseg.route_cache.misses")
+            rec.event(
+                "reroute", cat="routing", round=rnd, alive=len(live)
             )
-            up = routing.build_relay_program(
-                rels, n_nodes, sinks_s, table=table
-            )
-            down = routing.build_broadcast_program(rels, n_nodes, sinks_s)
+            with rec.span("groundseg.route", cat="routing", alive=len(live)):
+                rels = [r.restrict(live) for r in base_rels]
+                table = routing.earliest_delivery_routes(
+                    rels,
+                    n_nodes,
+                    sinks_s,
+                    sources=[v for v in sat_ids if v in live],
+                )
+                up = routing.build_relay_program(
+                    rels, n_nodes, sinks_s, table=table
+                )
+                down = routing.build_broadcast_program(rels, n_nodes, sinks_s)
             prog_cache[live_key] = (up, down)
+        else:
+            rec.counter("groundseg.route_cache.hits")
         up, down = prog_cache[live_key]
-        if (live_key, pool) not in fn_cache:
-            fn_cache[(live_key, pool)] = build_groundseg_round(
+        fn_key = (live_key, pool)
+        if fn_key not in exp_cache:
+            exp_cache[fn_key] = aggregation.expected_collectives(
+                up, down, n_buckets, compression=gs_cfg.compression, pool=pool
+            )
+        expected = exp_cache[fn_key]
+        batch = batch_fn(rnd)
+        if fn_key not in fn_cache:
+            rec.counter("groundseg.round_cache.misses")
+            rec.event(
+                "retrace",
+                cat="compile",
+                kind="groundseg_round",
+                round=rnd,
+                pool=pool,
+                cache_size=len(fn_cache),
+            )
+            fn = build_groundseg_round(
                 cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, up, down, pool
             )
-        fn = fn_cache[(live_key, pool)]
-        state, losses = fn(state, batch_fn(rnd))
+            if rec.reconcile:
+                with rec.span("groundseg.compile", cat="compile", pool=pool):
+                    fn = telemetry.compile_and_check(
+                        fn,
+                        (state, batch),
+                        expected,
+                        context=f"groundseg_round[pool={pool}]",
+                        recorder=rec,
+                    )
+            fn_cache[fn_key] = fn
+        else:
+            rec.counter("groundseg.round_cache.hits")
+        fn = fn_cache[fn_key]
+        with rec.span(
+            "groundseg.round",
+            cat="window",
+            round=rnd,
+            pool=pool,
+            alive=len(live),
+            delivered=up.delivered_count(),
+            unreachable=len(up.unreachable),
+        ):
+            state, losses = fn(state, batch)
+            if rec.tracing:
+                jax.block_until_ready((state, losses))
+        rec.counter("groundseg.rounds")
+        rec.counter("groundseg.payloads.delivered", up.delivered_count())
+        rec.counter("groundseg.payloads.unreachable", len(up.unreachable))
+        for kind, count in expected.items():
+            rec.counter(f"groundseg.collectives.{kind}", count)
         live_sats = [v for v in sat_ids if v in live]
         log_this = log_every > 0 and rnd % log_every == 0
         if log_this and live_sats:
@@ -680,6 +825,7 @@ def _run_groundseg_pipelined(
     from repro.core import fused
     from repro.groundseg import aggregation, routing
 
+    rec = telemetry.get_recorder()
     router = routing.MultiWindowRouter(
         n_nodes,
         sinks_s,
@@ -688,28 +834,119 @@ def _run_groundseg_pipelined(
     )
     node_params = jax.tree.map(lambda x: x[0], state["params"])
     spec = fused.cached_spec(node_params, block=gs_cfg.block)
+    n_buckets = len(spec.buckets)
     aux = {
         "carry": aggregation.stacked_zero_buffers(spec, n_nodes),
         "pending": aggregation.stacked_zero_buffers(spec, n_nodes),
     }
     fn_cache: Dict[Any, Any] = {}
+    exp_cache: Dict[Any, Dict[str, int]] = {}
     logs: list = []
     for rnd in range(rounds):
         live = set(alive) if alive is not None else set(range(n_nodes))
         live |= sinks_s
         pool = gs_cfg.pool_round(rnd)
-        wp = router.plan_window(base_rels, alive=live)
+        with rec.span("groundseg.plan_window", cat="routing", window=rnd):
+            wp = router.plan_window(base_rels, alive=live)
         key = (
             frozenset(live),
             tuple(sorted(wp.ages.items())),
             pool,
             wp.downlink is None,
         )
+        if key not in exp_cache:
+            exp_cache[key] = aggregation.expected_window_collectives(
+                wp, n_buckets, compression=gs_cfg.compression, pool=pool
+            )
+        expected = exp_cache[key]
+        batch = batch_fn(rnd)
         if key not in fn_cache:
-            fn_cache[key] = build_pipelined_groundseg_round(
+            rec.counter("groundseg.window_cache.misses")
+            rec.event(
+                "retrace",
+                cat="compile",
+                kind="groundseg_window",
+                window=wp.window,
+                pool=pool,
+                ages=dict(wp.ages),
+                cache_size=len(fn_cache),
+            )
+            fn = build_pipelined_groundseg_round(
                 cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, wp, pool
             )
-        state, aux, losses = fn_cache[key](state, aux, batch_fn(rnd))
+            if rec.reconcile:
+                with rec.span("groundseg.compile", cat="compile", pool=pool):
+                    fn = telemetry.compile_and_check(
+                        fn,
+                        (state, aux, batch),
+                        expected,
+                        context=f"groundseg_window[{wp.window}, pool={pool}]",
+                        recorder=rec,
+                    )
+            fn_cache[key] = fn
+        else:
+            rec.counter("groundseg.window_cache.hits")
+        with rec.span(
+            "groundseg.window",
+            cat="window",
+            window=wp.window,
+            pool=pool,
+            alive=len(live),
+            queued=len(wp.injected),
+            delivered=wp.uplink.delivered_count(),
+            carried=len(wp.residual),
+            dropped=len(wp.dropped),
+        ):
+            state, aux, losses = fn_cache[key](state, aux, batch)
+            if rec.tracing:
+                jax.block_until_ready((state, losses))
+        # payload lifecycle: queued -> relayed -> delivered | carried |
+        # dropped. Counters are default-on; per-payload instants (with
+        # staleness ages) exist only while tracing.
+        rec.counter("groundseg.rounds")
+        rec.counter("groundseg.payloads.queued", len(wp.injected))
+        rec.counter("groundseg.payloads.delivered", wp.uplink.delivered_count())
+        rec.counter("groundseg.payloads.carried", len(wp.residual))
+        rec.counter("groundseg.payloads.dropped", len(wp.dropped))
+        rec.counter("groundseg.payloads.unreachable", len(wp.uplink.unreachable))
+        rec.set_counter(
+            "groundseg.payloads.max_delivered_age",
+            max(
+                rec.get_counter("groundseg.payloads.max_delivered_age"),
+                wp.max_delivered_age(),
+            ),
+        )
+        for kind, count in expected.items():
+            rec.counter(f"groundseg.collectives.{kind}", count)
+        if rec.tracing:
+            for src in sorted(wp.injected):
+                rec.event(
+                    "payload.queued", cat="payload", window=wp.window, source=src
+                )
+            for src, age in sorted(wp.delivered_ages.items()):
+                rec.event(
+                    "payload.delivered",
+                    cat="payload",
+                    window=wp.window,
+                    source=src,
+                    age=age,
+                )
+            for src, age in sorted(wp.residual.items()):
+                rec.event(
+                    "payload.carried",
+                    cat="payload",
+                    window=wp.window,
+                    source=src,
+                    age=age,
+                )
+            for src, age in sorted(wp.dropped.items()):
+                rec.event(
+                    "payload.dropped",
+                    cat="payload",
+                    window=wp.window,
+                    source=src,
+                    age=age,
+                )
         live_sats = [v for v in sat_ids if v in live]
         log_this = log_every > 0 and rnd % log_every == 0
         if log_this and live_sats:

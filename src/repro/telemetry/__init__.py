@@ -1,0 +1,69 @@
+"""Flight-recorder telemetry: spans/counters/events, Chrome-trace export,
+and oracle reconciliation of compiled rounds (see ISSUE 6).
+
+Quick use::
+
+    from repro import telemetry
+
+    with telemetry.record_scope(tracing=True) as rec:
+        ... run FL rounds ...
+        telemetry.write_trace("trace.json", rec)        # -> Perfetto
+        print(telemetry.metrics_snapshot(rec)["counters"])
+
+Counters are default-on (host-side dict bumps, zero device syncs); spans,
+events, and per-round ``block_until_ready`` wall-clock timing exist only
+under ``tracing=True``; ``reconcile=True`` verifies every newly compiled
+round/window against the static collective oracles.
+"""
+
+from repro.telemetry.export import (
+    chrome_trace,
+    metrics_snapshot,
+    trace_scope,
+    write_metrics,
+    write_trace,
+)
+from repro.telemetry.reconcile import (
+    ReconcileReport,
+    ReconciliationError,
+    check_compiled,
+    compare,
+    compile_and_check,
+    compiled_collective_counts,
+    expected_tdm_collectives,
+)
+from repro.telemetry.recorder import (
+    Event,
+    Recorder,
+    Span,
+    counters_snapshot,
+    get_recorder,
+    record_scope,
+    set_reconcile,
+    set_tracing,
+    tracing_enabled,
+)
+
+__all__ = [
+    "Event",
+    "Recorder",
+    "ReconcileReport",
+    "ReconciliationError",
+    "Span",
+    "check_compiled",
+    "chrome_trace",
+    "compare",
+    "compile_and_check",
+    "compiled_collective_counts",
+    "counters_snapshot",
+    "expected_tdm_collectives",
+    "get_recorder",
+    "metrics_snapshot",
+    "record_scope",
+    "set_reconcile",
+    "set_tracing",
+    "trace_scope",
+    "tracing_enabled",
+    "write_metrics",
+    "write_trace",
+]

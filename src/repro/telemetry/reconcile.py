@@ -1,0 +1,173 @@
+"""Oracle reconciliation: check what was COMPILED against what was PLANNED.
+
+The repo has strong static oracles — ``expected_collectives`` /
+``expected_window_collectives`` for ground-segment programs and the M-per-
+matching structure of the fused TDM engine — but until now nothing checked
+a *running* system against them. This module turns the companion paper's
+formal-verification idea ("observed execution traces conform to the
+specified slot/exchange structure") into a production assert:
+
+- :func:`compiled_collective_counts` parses a compiled module's HLO text
+  (via :mod:`repro.launch.hlo_stats`, trip-count aware) into per-kind
+  collective counts;
+- :func:`check_compiled` compares them to a static expectation, records
+  the outcome on the flight recorder (``reconcile.checked`` /
+  ``reconcile.mismatched`` counters plus a trace event), and raises
+  :class:`ReconciliationError` in strict mode;
+- :func:`compile_and_check` is the driver hook: ahead-of-time compile a
+  jitted round/window function, reconcile it, and hand back the compiled
+  executable so the checked program is the one that runs. Drivers call it
+  on every compile-cache MISS when the active recorder's ``reconcile``
+  flag is set (:func:`repro.telemetry.recorder.set_reconcile`) — cache
+  hits re-use already-reconciled executables, so steady state pays
+  nothing.
+
+:func:`expected_tdm_collectives` supplies the static oracle for one fused
+TDM-FLA gossip round (M collective-permutes per dtype bucket, 2M for
+int8/top-k payloads), mirroring what ``tests/_fused_worker.py`` proves
+offline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+from repro.telemetry.recorder import Recorder, get_recorder
+
+
+class ReconciliationError(AssertionError):
+    """A compiled program diverged from its static oracle."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconcileReport:
+    """Outcome of one compiled-vs-oracle comparison."""
+
+    context: str
+    expected: Dict[str, int]
+    recorded: Dict[str, int]
+    mismatches: Tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.mismatches
+
+    def describe(self) -> str:
+        if self.ok:
+            return f"[{self.context}] reconciled: {self.expected}"
+        lines = [f"[{self.context}] collective counts diverged from oracle:"]
+        for kind in self.mismatches:
+            lines.append(
+                f"  {kind}: expected {self.expected.get(kind, 0)}, "
+                f"compiled {self.recorded.get(kind, 0)}"
+            )
+        return "\n".join(lines)
+
+
+def compiled_collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Per-kind collective counts of a compiled module (trip-count aware)."""
+    from repro.launch.hlo_stats import collective_stats
+
+    stats = collective_stats(hlo_text)
+    return {k: int(v) for k, v in stats.count_by_kind.items()}
+
+
+def compare(
+    expected: Dict[str, int],
+    recorded: Dict[str, int],
+    context: str = "",
+) -> ReconcileReport:
+    """Compare recorded counts against the oracle. Every kind the oracle
+    names must match exactly; recorded kinds the oracle is silent about
+    (e.g. an all-gather from parameter layout) are NOT failures — the
+    oracle speaks only for the exchange structure it models."""
+    mism = tuple(
+        kind
+        for kind, want in sorted(expected.items())
+        if int(recorded.get(kind, 0)) != int(want)
+    )
+    return ReconcileReport(
+        context=context,
+        expected={k: int(v) for k, v in expected.items()},
+        recorded=dict(recorded),
+        mismatches=mism,
+    )
+
+
+def check_compiled(
+    hlo_text: str,
+    expected: Dict[str, int],
+    *,
+    context: str = "",
+    recorder: Optional[Recorder] = None,
+    strict: bool = True,
+) -> ReconcileReport:
+    """Reconcile one compiled module against its static oracle, recording
+    the outcome on the flight recorder."""
+    rec = recorder or get_recorder()
+    report = compare(expected, compiled_collective_counts(hlo_text), context)
+    rec.counter("reconcile.checked")
+    if not report.ok:
+        rec.counter("reconcile.mismatched")
+    rec.event(
+        "reconcile",
+        cat="reconcile",
+        context=context,
+        ok=report.ok,
+        expected=report.expected,
+        recorded={k: report.recorded.get(k, 0) for k in report.expected},
+    )
+    if strict and not report.ok:
+        raise ReconciliationError(report.describe())
+    return report
+
+
+def compile_and_check(
+    fn,
+    args: Tuple[Any, ...],
+    expected: Optional[Dict[str, int]],
+    *,
+    context: str = "",
+    recorder: Optional[Recorder] = None,
+    strict: bool = True,
+):
+    """AOT-compile a jitted function, reconcile its HLO, return the
+    compiled executable (which respects the jit's ``donate_argnums``).
+
+    ``expected=None`` means no oracle covers this program — the compile
+    still happens (the caller wanted the executable) but only a
+    ``reconcile.skipped`` counter is recorded."""
+    rec = recorder or get_recorder()
+    compiled = fn.lower(*args).compile()
+    if expected is None:
+        rec.counter("reconcile.skipped")
+    else:
+        check_compiled(
+            compiled.as_text(),
+            expected,
+            context=context,
+            recorder=rec,
+            strict=strict,
+        )
+    return compiled
+
+
+def expected_tdm_collectives(
+    rel,
+    n_buckets: int,
+    *,
+    compression: str = "none",
+) -> Dict[str, int]:
+    """Static oracle for ONE fused TDM-FLA gossip round: the relation's
+    matchings each cost one collective-permute per dtype bucket —
+    two for int8 (payload + blockwise scales) and top-k/CHOCO (values +
+    indices) — independent of the model's leaf count (the PR 3 claim,
+    HLO-verified offline in ``tests/_fused_worker.py``)."""
+    from repro.core import tdm
+
+    if len(rel) == 0:
+        return {"collective-permute": 0}
+    per = 2 if compression in ("int8", "topk") else 1
+    matchings = len(tdm.edge_coloring(rel))
+    return {"collective-permute": matchings * per * int(n_buckets)}
