@@ -21,6 +21,14 @@ the analytic cost-oracle estimates) so shared CI runners can't flake the
 job; add ``wall_ms`` via ``--metrics`` when the runner is dedicated
 hardware.
 
+Summary objects also carry the flight-recorder ``telemetry`` counter
+snapshot; when both sides have counters they are diffed too —
+DIRECTION-AGNOSTIC (a counter drifting either way means the executed
+collective schedule changed, which is drift whether it got "better" or
+worse), with zero-baseline -> nonzero and missing counters failing
+outright. Filter which counters gate the job with ``--telemetry-prefix``
+(default trends them all); disable with ``--no-telemetry``.
+
 To (re)generate a baseline, run the benchmark with the same flags CI uses
 and commit its ``--out`` file under ``benchmarks/baselines/``.
 """
@@ -84,6 +92,90 @@ def load_rows(path: str) -> List[Dict]:
             rows.extend(_load_one(f))
         return rows
     return _load_one(p)
+
+
+def _telemetry_of(path: pathlib.Path) -> Dict[str, float]:
+    data = json.loads(path.read_text())
+    if isinstance(data, dict) and isinstance(data.get("telemetry"), dict):
+        return {
+            k: float(v)
+            for k, v in data["telemetry"].items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+        }
+    return {}
+
+
+def load_telemetry(path: str) -> Dict[str, float]:
+    """Flight-recorder counters from a summary object (or a directory of
+    them, counters summed across benches — collisions like
+    ``bench.measured_cells`` accumulate exactly as a combined run would).
+    Plain row-list files carry no counters -> {} (telemetry diff skipped)."""
+    p = pathlib.Path(path)
+    if p.is_dir():
+        files = sorted(p.glob("BENCH_*.json")) or sorted(p.glob("*.json"))
+        merged: Dict[str, float] = {}
+        for f in files:
+            for k, v in _telemetry_of(f).items():
+                merged[k] = merged.get(k, 0.0) + v
+        return merged
+    return _telemetry_of(p)
+
+
+def compare_telemetry(
+    baseline: Dict[str, float],
+    run: Dict[str, float],
+    threshold: float,
+    prefix: str = "",
+):
+    """Diff counter snapshots. Returns (failures, table_rows).
+
+    Unlike BENCH metrics this is direction-agnostic: a counter moving
+    EITHER way beyond the threshold means the executed schedule changed
+    (e.g. a collective-permute appearing or disappearing), which is drift
+    regardless of sign. Missing counters and zero-baseline -> nonzero fail;
+    counters only present in the run are listed as ``new`` but don't fail
+    (adding instrumentation shouldn't break the nightly)."""
+    failures: List[str] = []
+    table: List[Tuple[str, str, str, str, str, str, str]] = []
+    for name in sorted(baseline):
+        if prefix and not name.startswith(prefix):
+            continue
+        b = baseline[name]
+        if name not in run:
+            failures.append(f"[telemetry] counter {name} missing from run")
+            table.append(("telemetry", "", name, f"{b:.6g}", "missing", "—",
+                          "FAIL"))
+            continue
+        r = run[name]
+        if b == 0:
+            if r != 0:
+                failures.append(
+                    f"[telemetry] {name} drifted from zero baseline to "
+                    f"{r:.6g}"
+                )
+                table.append(("telemetry", "", name, "0", f"{r:.6g}", "—",
+                              "DRIFTED"))
+            else:
+                table.append(("telemetry", "", name, "0", "0", "+0.0%", "ok"))
+            continue
+        ratio = r / b
+        delta = f"{(ratio - 1) * 100:+.1f}%"
+        if abs(ratio - 1.0) > threshold:
+            failures.append(
+                f"[telemetry] {name} drifted {b:.6g} -> {r:.6g} "
+                f"({delta})"
+            )
+            status = "DRIFTED"
+        else:
+            status = "ok"
+        table.append(("telemetry", "", name, f"{b:.6g}", f"{r:.6g}", delta,
+                      status))
+    for name in sorted(set(run) - set(baseline)):
+        if prefix and not name.startswith(prefix):
+            continue
+        table.append(("telemetry", "", name, "—", f"{run[name]:.6g}", "—",
+                      "new"))
+    return failures, table
 
 
 def compare(
@@ -214,12 +306,26 @@ def main(argv=None) -> int:
     )
     p.add_argument("--threshold", type=float, default=0.20,
                    help="fractional regression that fails (default 0.20)")
+    p.add_argument("--no-telemetry", action="store_true",
+                   help="skip the flight-recorder counter diff")
+    p.add_argument("--telemetry-prefix", default="",
+                   help="only diff counters with this prefix (default: all)")
     args = p.parse_args(argv)
     metrics = tuple(m.strip() for m in args.metrics.split(",") if m.strip())
 
     failures, improvements, checked, table = compare(
         load_rows(args.baseline), load_rows(args.run), metrics, args.threshold
     )
+    if not args.no_telemetry:
+        base_tel = load_telemetry(args.baseline)
+        run_tel = load_telemetry(args.run)
+        if base_tel and run_tel:
+            tel_failures, tel_table = compare_telemetry(
+                base_tel, run_tel, args.threshold, args.telemetry_prefix
+            )
+            failures += tel_failures
+            table += tel_table
+            checked += sum(1 for r in tel_table if r[6] != "new")
     if table:
         print(format_table(table))
         print()

@@ -8,7 +8,9 @@ drivers actually exchange.
 The structural claim (core/fused.py): a per-leaf round issues L×M
 collective-permutes for an L-leaf model over an M-matching relation (2M per
 leaf-payload-component for compressed modes), while the fused flat-buffer
-engine issues exactly M (2M for int8: payload + scales) — independent of L.
+engine issues exactly M (2M for int8: payload + scales; top-k bit-packs
+values + indices into ONE int32 payload so it stays at M) — independent
+of L.
 Collective counts come from the compiled HLO via
 ``launch.hlo_stats.collective_stats``; wall time is measured on the forced
 8-host-device mesh (launch overhead dominates there exactly as it does on a
@@ -76,8 +78,10 @@ def make_registry_tree(arch_name: str):
 
 
 def model_cells(names):
-    """(label, tree, n_leaves, elems_per_node) for synthetic specs
-    ``(n_leaves, leaf_elems)`` and registry arch-name strings alike."""
+    """(label, tree, n_leaves, elems_per_node, min_leaf) for synthetic specs
+    ``(n_leaves, leaf_elems)`` and registry arch-name strings alike.
+    ``min_leaf`` bounds the per-leaf top-k payload (``jax.lax.top_k``
+    requires k <= leaf size; the fused engine has no such limit)."""
     cells = []
     for spec in names:
         if isinstance(spec, str):
@@ -88,8 +92,8 @@ def model_cells(names):
             tree = make_tree(n_leaves, leaf_elems)
             label = f"synth-L{n_leaves}"
         leaves = jax.tree.leaves(tree)
-        elems = sum(int(np.prod(l.shape[1:])) for l in leaves)
-        cells.append((label, tree, len(leaves), elems))
+        sizes = [int(np.prod(l.shape[1:])) for l in leaves]
+        cells.append((label, tree, len(leaves), sum(sizes), min(sizes)))
     return cells
 
 
@@ -158,7 +162,7 @@ def _main(args):
     if args.smoke:
         models = [(12, 1 << 10), "mamba2-780m"]
         rel_names = ["ring", "clique"]
-        modes = ["none", "int8"]
+        modes = ["none", "int8", "topk"]
         reps = args.reps or 3
     elif args.full:
         models = [
@@ -171,7 +175,7 @@ def _main(args):
     else:
         models = [(12, 1 << 10), (48, 1 << 12), "mamba2-780m", "gemma2-9b"]
         rel_names = ["ring", "clique"]
-        modes = ["none", "int8"]
+        modes = ["none", "int8", "topk"]
         reps = args.reps or 5
 
     mesh = Mesh(np.array(jax.devices()[:N]), ("node",))
@@ -181,15 +185,20 @@ def _main(args):
         f"{'model':<16} {'rel':<7} {'mode':<5} {'engine':<8} "
         f"{'permutes':>8} {'coll MB':>8} {'wall ms':>9}"
     )
-    for label, tree, n_leaves, elems in model_cells(models):
+    for label, tree, n_leaves, elems, min_leaf in model_cells(models):
         for rel_name in rel_names:
             rel = rels[rel_name]
             n_matchings = len(tdm.edge_coloring(rel))
             for mode in modes:
                 cell = {}
+                # per-leaf top-k caps k at the smallest leaf (top_k errors
+                # above it); the collective COUNT is k-independent, so the
+                # permute comparison is unaffected
+                topk_k = min(64, min_leaf)
                 for engine in ("perleaf", "fused"):
                     cfg = fl.TDMFLAConfig(
-                        compression=mode, topk_k=64, fused=(engine == "fused")
+                        compression=mode, topk_k=topk_k,
+                        fused=(engine == "fused"),
                     )
                     fn = build_round_fn(mesh, rel, cfg)
                     stats, wall = measure(fn, tree, reps)
@@ -247,9 +256,15 @@ def _main(args):
         f"{best['permutes_fused']:.0f})"
     )
     if args.out:
+        # summary-object form ({bench, rows, telemetry}) so
+        # check_regression can trend the flight-recorder counters too
         out_path = pathlib.Path(args.out)
         out_path.parent.mkdir(parents=True, exist_ok=True)
-        out_path.write_text(json.dumps(rows, indent=1))
+        out_path.write_text(json.dumps({
+            "bench": "fused_exchange",
+            "rows": rows,
+            "telemetry": telemetry.counters_snapshot(),
+        }, indent=1))
         print(f"wrote {len(rows)} rows to {out_path}")
     return rows
 

@@ -8,7 +8,8 @@ parameter pytree ONCE per round into dtype-bucketed, block-padded contiguous
 buffers, runs the whole mixing step on the fused buffer(s), and unflattens:
 
     per-leaf:  L×M collective-permutes  (2–3 L×M for compressed payloads)
-    fused:       M collective-permutes  (2M int8: payload+scales; 2M CHOCO)
+    fused:       M collective-permutes  (2M int8: payload+scales; M CHOCO —
+                 values+indices packed into one int32 payload)
 
 per dtype bucket — for the common all-fp32 model, exactly M. The claim is
 HLO-verified in tests (``tests/_fused_worker.py``) and measured by
@@ -30,11 +31,16 @@ Numerical contract per compression mode:
   The per-leaf path also uses uniform 1/(1+Δ) weights where the fused path
   uses exact Metropolis weights — identical on regular relations.
 - ``topk`` (CHOCO-Gossip): the compression state lives on the fused buffer
-  and top-k selection is GLOBAL over the bucket instead of per-leaf; the
-  per-round payload budget is matched by scaling k to ``topk_k × n_leaves``.
-  Same convergence guarantees (it is the same CHOCO recursion on the
-  concatenated state); per-round outputs differ from per-leaf by which
-  coordinates the shared budget selects.
+  and selection is BLOCKWISE over the bucket (the fused ``topk_sparsify``
+  kernel picks ``ceil(k_total/nb)`` coordinates per block, one select+
+  scatter pass, no host-side gather); the per-round payload budget is
+  matched by scaling ``k_total`` to ``topk_k × n_leaves``. Values and
+  block-local indices travel PACKED in a single int32 array, so a round
+  costs M collective-permutes per bucket — same as uncompressed — and the
+  receive side folds each arrival into the CHOCO accumulator with the
+  fused ``scatter_accumulate`` kernel. Same convergence guarantees (the
+  same CHOCO recursion on the concatenated state); per-round outputs
+  differ from per-leaf by which coordinates the budget selects.
 
 All entry points run inside ``shard_map`` over the node axis, like
 everything in :mod:`repro.core.tdm`.
@@ -231,6 +237,38 @@ def _resolve_impl(impl: str) -> str:
     return impl
 
 
+def _quantize(x32, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.quantize_ref(x32, block=block)
+    return q_kernel.quantize_fwd(
+        x32, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def _dequant_acc(q, s, acc, w, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.dequant_acc_ref(q, s, acc, w, block=block)
+    return q_kernel.dequant_accumulate_fwd(
+        q, s, acc, w, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def _topk(x32, k: int, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.topk_sparsify_ref(x32, k, block=block)
+    return q_kernel.topk_sparsify_fwd(
+        x32, k, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
+def _scatter_acc(vals, idxs, acc, w, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.scatter_acc_ref(vals, idxs, acc, w, block=block)
+    return q_kernel.scatter_accumulate_fwd(
+        vals, idxs, acc, w, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
 def int8_gossip(
     x: jax.Array,
     rel: Relation,
@@ -256,27 +294,85 @@ def int8_gossip(
     idx = jax.lax.axis_index(axis_name)
     diag, per_matching = tdm.matching_weight_vectors(rel, n)
     x32 = x.astype(jnp.float32)
-    if impl == "ref":
-        q, scales = q_ref.quantize_ref(x32, block=block)
-    else:
-        q, scales = q_kernel.quantize_fwd(
-            x32, block=block, interpret=(impl == "pallas_interpret")
-        )
+    q, scales = _quantize(x32, block, impl)
     acc = jnp.zeros_like(x32)
     matchings = tdm.edge_coloring(rel)
     for m, w_m in zip(matchings, per_matching):
         q_r = tdm.exchange_matching(q, m, axis_name)
         s_r = tdm.exchange_matching(scales, m, axis_name)
         w = jnp.asarray(w_m, jnp.float32)[idx]
-        if impl == "ref":
-            acc = q_ref.dequant_acc_ref(q_r, s_r, acc, w, block=block)
-        else:
-            acc = q_kernel.dequant_accumulate_fwd(
-                q_r, s_r, acc, w, block=block,
-                interpret=(impl == "pallas_interpret"),
-            )
+        acc = _dequant_acc(q_r, s_r, acc, w, block, impl)
     self_w = jnp.asarray(diag, jnp.float32)[idx]
     return (self_w * x32 + acc).astype(x.dtype)
+
+
+def choco_fused_round(
+    buf: jax.Array,
+    state: tdm.ChocoState,
+    rel: Relation,
+    axis_name: str,
+    n: int,
+    k_total: int,
+    *,
+    gamma: float = 0.4,
+    block: int = DEFAULT_BLOCK,
+    impl: str = "auto",
+) -> Tuple[jax.Array, tdm.ChocoState]:
+    """One CHOCO-Gossip round on a fused buffer via the fused top-k kernels.
+
+    The same recursion as :func:`repro.core.tdm.choco_gossip_round` (x̂/s
+    public-copy state, γ-damped consensus step), lowered onto the
+    ``tdm_compress`` kernel family:
+
+    - selection: ONE ``topk_sparsify`` pass picks ``ceil(k_total/nb)``
+      coordinates per block and emits the dense sparsified update (for x̂)
+      plus the wire payload (vals + block-local idxs) — no argsort/gather on
+      the host path;
+    - wire: vals are bitcast to int32 and PACKED with the indices into a
+      single (nb, 2, k_b) array, so each matching costs ONE
+      collective-permute — M per round per bucket, half of the unpacked
+      values+indices scheme;
+    - receive: each arrival folds into the CHOCO accumulator ``s`` with one
+      fused ``scatter_accumulate`` pass (dense contribution never hits HBM).
+
+    State is carried in fp32 regardless of the buffer dtype. Requires
+    ``len(buf) % block == 0`` (the FlatSpec contract) and a FIXED relation
+    across rounds, like every CHOCO path.
+    """
+    if buf.shape[0] % block:
+        raise ValueError(
+            f"fused CHOCO needs a block-padded buffer: {buf.shape[0]} % "
+            f"{block} != 0"
+        )
+    impl = _resolve_impl(impl)
+    nb = buf.shape[0] // block
+    k_b = max(1, min(block, -(-int(k_total) // nb)))
+    idx = jax.lax.axis_index(axis_name)
+    x32 = buf.astype(jnp.float32)
+    x_hat = state.x_hat.astype(jnp.float32)
+    s = state.s.astype(jnp.float32)
+
+    dense_q, vals, idxs = _topk(x32 - x_hat, k_b, block, impl)
+    new_x_hat = x_hat + dense_q
+    payload = jnp.stack(
+        [jax.lax.bitcast_convert_type(vals, jnp.int32), idxs], axis=1
+    )  # (nb, 2, k_b): one int32 wire word per payload entry component
+
+    W = tdm.metropolis_weights(rel, n)
+    _, per_matching = tdm.matching_weight_vectors(rel, n)
+    for m, w_m in zip(tdm.edge_coloring(rel), per_matching):
+        p_r = tdm.exchange_matching(payload, m, axis_name)
+        v_r = jax.lax.bitcast_convert_type(p_r[:, 0, :], jnp.float32)
+        i_r = p_r[:, 1, :]
+        w = jnp.asarray(w_m, jnp.float32)[idx]
+        s = _scatter_acc(v_r, i_r, s, w, block, impl)
+
+    deg_w = np.zeros((n,), dtype=np.float32)
+    for i in range(n):
+        deg_w[i] = sum(W[i, j] for j in rel.peers_of(i))
+    d_i = jnp.asarray(deg_w, jnp.float32)[idx]
+    new_x = x32 + jnp.float32(gamma) * (s - d_i * new_x_hat)
+    return new_x.astype(buf.dtype), tdm.ChocoState(x_hat=new_x_hat, s=s)
 
 
 def fused_buffer_mix(
@@ -301,9 +397,14 @@ def fused_buffer_mix(
         return buf, residual
     if cfg.compression == "topk":
         k = min(cfg.topk_k * max(n_leaves, 1), buf.shape[0])
-        state = residual if isinstance(residual, tdm.ChocoState) else tdm.choco_init(buf)
-        return tdm.choco_gossip_round(
-            buf, state, rel, axis_name, n, k, gamma=cfg.choco_gamma
+        state = (
+            residual
+            if isinstance(residual, tdm.ChocoState)
+            else tdm.choco_init(buf.astype(jnp.float32))
+        )
+        return choco_fused_round(
+            buf, state, rel, axis_name, n, k,
+            gamma=cfg.choco_gamma, block=block, impl=quant_impl,
         )
     if cfg.compression == "int8":
         return (
@@ -353,3 +454,88 @@ def fused_tdm_fla_round(
             quant_impl=quant_impl,
         )
     return unflatten_pytree(spec, mixed), res_out
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (pod × data) gossip on fused buffers
+# ---------------------------------------------------------------------------
+
+_HIERARCHICAL_COMPRESSIONS = ("none", "int8")
+
+
+def hierarchical_buffer_mix(
+    buf: jax.Array,
+    intra_rel: Relation,
+    inter_rel: Relation,
+    data_axis: str,
+    pod_axis: str,
+    n_data: int,
+    n_pods: int,
+    *,
+    compression: str = "none",
+    block: int = DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+) -> jax.Array:
+    """Two-level TDM mixing of one fused buffer: gossip within each pod over
+    ``data_axis`` (dense ICI), then between pods over ``pod_axis`` (the
+    sparse optical ISLs) — :func:`repro.core.tdm.hierarchical_gossip`
+    lowered onto the fused engine, now including the int8 kernel path
+    (quantize once PER LEVEL; each level's matchings ship payload+scales
+    through the fused dequant+accumulate kernel).
+
+    ``compression`` must be ``"none"`` or ``"int8"``: topk/CHOCO state is
+    tied to one fixed relation and does not fit a two-level schedule.
+    """
+    if compression not in _HIERARCHICAL_COMPRESSIONS:
+        raise ValueError(
+            "hierarchical gossip compression must be one of "
+            f"{_HIERARCHICAL_COMPRESSIONS}, got {compression!r} (topk/CHOCO "
+            "state is tied to one fixed relation, not a two-level schedule)"
+        )
+    for rel, axis, n_ax in (
+        (intra_rel, data_axis, n_data),
+        (inter_rel, pod_axis, n_pods),
+    ):
+        if len(rel) == 0:
+            continue
+        if compression == "int8":
+            buf = int8_gossip(
+                buf, rel, axis, n_ax, block=block, impl=quant_impl
+            )
+        else:
+            buf = tdm.gossip_avg(buf, rel, axis, n_ax)
+    return buf
+
+
+def fused_hierarchical_round(
+    params: Any,
+    intra_rel: Relation,
+    inter_rel: Relation,
+    data_axis: str,
+    pod_axis: str,
+    n_data: int,
+    n_pods: int,
+    *,
+    compression: str = "none",
+    block: int = DEFAULT_BLOCK,
+    quant_impl: str = "auto",
+) -> Any:
+    """Hierarchical (pod × data) TDM round over a whole pytree through the
+    fused engine: flatten once, mix each dtype bucket at both levels,
+    unflatten. ``compression="none"`` is bit-identical to per-leaf
+    :func:`repro.core.tdm.hierarchical_gossip` (same elementwise gossip on
+    the concatenation); static cost is
+    ``(M_intra + M_inter) × per × n_buckets`` collective-permutes with
+    ``per = 2`` for int8 — the
+    :func:`repro.telemetry.expected_hierarchical_collectives` oracle.
+    """
+    spec = cached_spec(params, block=block)
+    buffers = flatten_pytree(spec, params)
+    mixed = {
+        bucket: hierarchical_buffer_mix(
+            buf, intra_rel, inter_rel, data_axis, pod_axis, n_data, n_pods,
+            compression=compression, block=block, quant_impl=quant_impl,
+        )
+        for bucket, buf in buffers.items()
+    }
+    return unflatten_pytree(spec, mixed)

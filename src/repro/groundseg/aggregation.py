@@ -32,10 +32,23 @@ leaf. Key structural facts, all static Python:
   and adopt, uncovered satellites keep their locally-trained params (the
   paper's skip-slot semantics applied to the model broadcast).
 
-int8 relaying re-quantizes per hop (each relay re-encodes before its next
-transmission — physically honest for a store-and-forward radio) using the
-same Pallas ``tdm_compress`` kernels as the fused gossip engine, with the
-receive side folding dequant+accumulate into one pass over the buffer.
+int8 relaying is QUANTIZE-ONCE: every route performs exactly one
+quantize/dequant pair end-to-end, however many hops it rides.
+
+- Uplink: the nodes agree on shared blockwise scales (one ``pmax``
+  all-reduce per bucket — the scales never travel on an ISL), each source
+  encodes its payload once with the shared scales (Pallas
+  ``quantize_scaled``), and relays accumulate IN THE INTEGER DOMAIN: the
+  int16 partial sums ride the ppermutes (one permute per batch per bucket)
+  and integer addition is exact, so no relay ever re-encodes and
+  quantization error is independent of hop count. At the sink one fused
+  dequant+accumulate pass folds ``scales · Σ q`` onto the fp32 channel
+  (non-source models — the sink's own anchor — stay fp32 and never
+  quantize).
+- Downlink: the sink quantizes the global model once; the flood forwards
+  the (payload, scales) pair VERBATIM (2 permutes per batch per bucket),
+  so every covered satellite decodes the identical bits regardless of its
+  depth in the flood tree.
 """
 
 from __future__ import annotations
@@ -77,6 +90,14 @@ def _quantize(x32: jax.Array, block: int, impl: str):
     )
 
 
+def _quantize_scaled(x32: jax.Array, scales: jax.Array, block: int, impl: str):
+    if impl == "ref":
+        return q_ref.quantize_scaled_ref(x32, scales, block=block)
+    return q_kernel.quantize_scaled_fwd(
+        x32, scales, block=block, interpret=(impl == "pallas_interpret")
+    )
+
+
 def _dequant_acc(q, s, acc, w, block: int, impl: str):
     if impl == "ref":
         return q_ref.dequant_acc_ref(q, s, acc, w, block=block)
@@ -107,37 +128,58 @@ def relay_uplink(
     """Execute the uplink relay program on fused buffers.
 
     Per slot: every scheduled sender ships its whole accumulated buffer
-    (one ppermute batch per buffer; int8 ships payload + scales) and sheds
-    it; arrivals — including arrivals AT a sender, which stay for its next
-    scheduled hop — accumulate. Nodes outside the program are untouched.
+    (one ppermute batch per buffer) and sheds it; arrivals — including
+    arrivals AT a sender, which stay for its next scheduled hop —
+    accumulate. Nodes outside the program are untouched.
+
+    int8 is the quantize-once path: shared blockwise scales are agreed via
+    ONE ``pmax`` all-reduce per bucket, every node that ever sends encodes
+    its payload once with them, and the relay accumulates int16 partial
+    sums on the wire (integer adds are exact; ``|Σq| ≤ 127 × sources``
+    fits int16 comfortably). A single fused dequant+accumulate pass at the
+    end folds the integer channel onto the fp32 channel holding the
+    never-sent models (sink anchors), so a payload's quantization error is
+    the single-encode error no matter how many hops it rode. One permute
+    per batch per bucket — scales never travel.
     """
     _check_compression(compression)
-    impl = fused._resolve_impl(quant_impl) if compression == "int8" else None
     n = program.n_nodes
     idx = jax.lax.axis_index(axis_name)
     out = dict(buffers)
+    sources = sorted({s for sends in program.slot_sends for s, _ in sends})
+    if compression == "int8" and sources:
+        impl = fused._resolve_impl(quant_impl)
+        ever_src = jnp.asarray(_mask(sources, n))[idx]
+        for bucket, buf in out.items():
+            x32 = buf.astype(jnp.float32)
+            s_shared = jax.lax.pmax(
+                q_ref.blockwise_scales_ref(x32, block=block), axis_name
+            )
+            q = _quantize_scaled(x32, s_shared, block, impl)
+            z = jnp.where(ever_src, q, 0).astype(jnp.int16)
+            f = jnp.where(ever_src, 0.0, x32)
+            for sends in program.slot_sends:
+                if not sends:
+                    continue
+                is_sender = jnp.asarray(_mask([s for s, _ in sends], n))[idx]
+                z_pre = z
+                z = jnp.where(is_sender, jnp.int16(0), z)
+                for batch in permutation_batches(sends):
+                    z = z + _ppermute(z_pre, batch, axis_name)
+            out[bucket] = _dequant_acc(
+                z, s_shared, f, jnp.float32(1.0), block, impl
+            ).astype(buf.dtype)
+        return out
     for sends in program.slot_sends:
         if not sends:
             continue
         is_sender = jnp.asarray(_mask([s for s, _ in sends], n))[idx]
         batches = permutation_batches(sends)
         for bucket, buf in out.items():
-            if compression == "int8":
-                x32 = buf.astype(jnp.float32)
-                q, s = _quantize(x32, block, impl)
-                acc = jnp.where(is_sender, 0.0, x32)
-                for batch in batches:
-                    q_r = _ppermute(q, batch, axis_name)
-                    s_r = _ppermute(s, batch, axis_name)
-                    acc = _dequant_acc(
-                        q_r, s_r, acc, jnp.float32(1.0), block, impl
-                    )
-                out[bucket] = acc.astype(buf.dtype)
-            else:
-                acc = jnp.where(is_sender, jnp.zeros_like(buf), buf)
-                for batch in batches:
-                    acc = acc + _ppermute(buf, batch, axis_name)
-                out[bucket] = acc
+            acc = jnp.where(is_sender, jnp.zeros_like(buf), buf)
+            for batch in batches:
+                acc = acc + _ppermute(buf, batch, axis_name)
+            out[bucket] = acc
     return out
 
 
@@ -227,31 +269,48 @@ def broadcast_downlink(
     quant_impl: str = "auto",
 ) -> Buffers:
     """Execute the downlink flood on fused buffers: each receiver adopts
-    its (single) parent's buffer the slot it is first covered."""
+    its (single) parent's buffer the slot it is first covered.
+
+    int8 is quantize-once: each node encodes its own buffer ONCE up front
+    (only the flood roots' encodings matter — everyone else's channel is
+    overwritten before it first sends), and the flood forwards the
+    (payload, scales) pair VERBATIM — a covered receiver both adopts the
+    decoded model and relays the original bits, so every satellite on a
+    route decodes the identical single-quantization payload. 2 permutes
+    per batch per bucket, one quantize at the root and one dequant per
+    receiver, independent of hop count.
+    """
     _check_compression(compression)
     impl = fused._resolve_impl(quant_impl) if compression == "int8" else None
     n = program.n_nodes
     idx = jax.lax.axis_index(axis_name)
     out = dict(buffers)
-    for sends in program.slot_sends:
-        if not sends:
-            continue
-        batches = permutation_batches(sends)
-        for bucket, buf in out.items():
-            if compression == "int8":
-                x32 = buf.astype(jnp.float32)
-                q, s = _quantize(x32, block, impl)
-                for batch in batches:
+    receivers = sorted({d for sends in program.slot_sends for _, d in sends})
+    for bucket, buf in out.items():
+        if compression == "int8":
+            if not receivers:
+                continue
+            x32 = buf.astype(jnp.float32)
+            q, s = _quantize(x32, block, impl)
+            for sends in program.slot_sends:
+                if not sends:
+                    continue
+                for batch in permutation_batches(sends):
                     got = jnp.asarray(_mask([d for _, d in batch], n))[idx]
                     q_r = _ppermute(q, batch, axis_name)
                     s_r = _ppermute(s, batch, axis_name)
-                    dec = _dequant_acc(
-                        q_r, s_r, jnp.zeros_like(x32), jnp.float32(1.0),
-                        block, impl,
-                    )
-                    buf = jnp.where(got, dec.astype(buf.dtype), buf)
-            else:
-                for batch in batches:
+                    q = jnp.where(got, q_r, q)
+                    s = jnp.where(got, s_r, s)
+            dec = _dequant_acc(
+                q, s, jnp.zeros_like(x32), jnp.float32(1.0), block, impl
+            )
+            covered = jnp.asarray(_mask(receivers, n))[idx]
+            out[bucket] = jnp.where(covered, dec.astype(buf.dtype), buf)
+        else:
+            for sends in program.slot_sends:
+                if not sends:
+                    continue
+                for batch in permutation_batches(sends):
                     got = jnp.asarray(_mask([d for _, d in batch], n))[idx]
                     recv = _ppermute(buf, batch, axis_name)
                     buf = jnp.where(got, recv, buf)
@@ -268,21 +327,35 @@ def expected_collectives(
     pool: bool = True,
 ) -> Dict[str, int]:
     """Static collective counts one ground-segment round lowers to — the
-    oracle the HLO tests compare compiled modules against. Per ppermute
-    batch: one permute per buffer (two for int8: payload + scales); plus
-    one masked psum per buffer when the sinks pool. ``downlink=None``
-    (the first window of a depth-2 pipeline — no global model to flood
-    yet) contributes nothing; the carry/staleness channel is local
-    arithmetic and never adds a collective."""
+    oracle the HLO tests compare compiled modules against.
+
+    Uncompressed: one permute per ppermute batch per buffer. int8
+    (quantize-once): the uplink ships int16 partial sums — ONE permute per
+    batch per buffer (scales never travel, they are agreed via one ``pmax``
+    all-reduce per buffer) — while the downlink floods (payload, scales)
+    verbatim at two permutes per batch per buffer. Pooling sinks adds one
+    masked psum per buffer. ``downlink=None`` (the first window of a
+    depth-2 pipeline — no global model to flood yet) contributes nothing;
+    the carry/staleness channel is local arithmetic and never adds a
+    collective."""
     from repro.groundseg.routing import program_batch_count
 
-    per_batch = 2 if compression == "int8" else 1
-    batches = program_batch_count(uplink)
-    if downlink is not None:
-        batches += program_batch_count(downlink)
+    up_batches = program_batch_count(uplink)
+    down_batches = (
+        program_batch_count(downlink) if downlink is not None else 0
+    )
+    uplink_sends = any(uplink.slot_sends)
+    if compression == "int8":
+        permutes = (up_batches + 2 * down_batches) * n_buckets
+        all_reduce = (n_buckets if uplink_sends else 0) + (
+            n_buckets if pool else 0
+        )
+    else:
+        permutes = (up_batches + down_batches) * n_buckets
+        all_reduce = n_buckets if pool else 0
     return {
-        "collective-permute": batches * per_batch * n_buckets,
-        "all-reduce": (n_buckets if pool else 0),
+        "collective-permute": permutes,
+        "all-reduce": all_reduce,
     }
 
 

@@ -12,6 +12,9 @@ from repro.kernels.tdm_compress.tdm_compress import (
     dequant_accumulate_fwd,
     dequantize_fwd,
     quantize_fwd,
+    quantize_scaled_fwd,
+    scatter_accumulate_fwd,
+    topk_sparsify_fwd,
 )
 
 
@@ -50,4 +53,38 @@ def dequant_accumulate(
     """Fused ``acc + w * dequant(q, scales)`` over a flat payload."""
     return dequant_accumulate_fwd(
         q, scales, acc, w, block=block, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quantize_scaled(
+    x: jax.Array, scales: jax.Array, *, block: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """int8-encode a flat payload with shared blockwise scales."""
+    return quantize_scaled_fwd(
+        x.reshape(-1).astype(jnp.float32), scales, block=block,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_sparsify(
+    x: jax.Array, *, k: int, block: int = 1024, interpret: bool = False
+):
+    """Fused blockwise top-k select+scatter over a flat payload:
+    ``(dense, vals (nb, k), idxs (nb, k))``."""
+    return topk_sparsify_fwd(
+        x.reshape(-1).astype(jnp.float32), k, block=block, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def scatter_accumulate(
+    vals: jax.Array, idxs: jax.Array, acc: jax.Array, w: jax.Array, *,
+    block: int = 1024, interpret: bool = False,
+) -> jax.Array:
+    """Fused ``acc + w * scatter(vals at block-local idxs)``."""
+    return scatter_accumulate_fwd(
+        vals, idxs, acc, w, block=block, interpret=interpret
     )

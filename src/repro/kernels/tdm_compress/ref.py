@@ -13,6 +13,17 @@ def _pad_to_block(x: jax.Array, block: int) -> jax.Array:
     return x
 
 
+def blockwise_scales_ref(x: jax.Array, block: int = 1024) -> jax.Array:
+    """Per-block symmetric quantization scales: ``max(absmax, 1e-12)/127``.
+
+    The scale computation shared by every quantize path (local scales, and
+    the relay's ``pmax``-shared scales) — a pure reduction, so the Pallas
+    and ref quantizers both consume it bit-identically."""
+    xp = _pad_to_block(x.astype(jnp.float32), block)
+    xb = xp.reshape(xp.shape[0] // block, block)
+    return jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / 127.0
+
+
 def quantize_ref(x: jax.Array, block: int = 1024):
     """x: flat (n,) fp32, any n -> (q int8 (n,), scales (ceil(n/block),))."""
     n = x.shape[0]
@@ -22,6 +33,19 @@ def quantize_ref(x: jax.Array, block: int = 1024):
     scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=1), 1e-12) / 127.0
     q = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
     return q.reshape(nb * block)[:n], scale
+
+
+def quantize_scaled_ref(x: jax.Array, scales: jax.Array, block: int = 1024):
+    """Quantize with CALLER-SUPPLIED blockwise scales (the quantize-once
+    relay contract: scales are shared across the route via ``pmax``, so a
+    payload is encoded exactly once end-to-end). x: flat (n,); scales:
+    (ceil(n/block),) fp32 positive -> q int8 (n,)."""
+    n = x.shape[0]
+    xp = _pad_to_block(x.astype(jnp.float32), block)
+    nb = xp.shape[0] // block
+    xb = xp.reshape(nb, block)
+    q = jnp.clip(jnp.round(xb / scales[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(nb * block)[:n]
 
 
 def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 1024):
@@ -35,7 +59,62 @@ def dequantize_ref(q: jax.Array, scale: jax.Array, block: int = 1024):
 
 def dequant_acc_ref(q: jax.Array, scale: jax.Array, acc: jax.Array, w,
                     block: int = 1024):
-    """acc + w * dequant(q, scale) — oracle for the fused receive pass."""
+    """acc + w * dequant(q, scale) — oracle for the fused receive pass.
+
+    ``q`` may be any integer dtype: int8 payloads on the gossip path, int16
+    partial sums on the quantize-once relay path (integer-domain
+    accumulation keeps multi-hop routes exact between the endpoints)."""
     return acc.astype(jnp.float32) + jnp.asarray(w, jnp.float32) * dequantize_ref(
         q, scale, block
     )
+
+
+def topk_sparsify_ref(x: jax.Array, k: int, block: int = 1024):
+    """Blockwise top-k magnitude sparsification — the jnp oracle for the
+    fused select+scatter kernel.
+
+    x: flat (n,) -> ``(dense (n,) fp32, vals (nb, k) fp32, idxs (nb, k)
+    int32)`` where ``nb = ceil(n/block)`` and ``idxs`` are block-LOCAL
+    positions. Selection key is ``|x|`` with NaN ranked above +inf (NaN
+    never silently drops a coordinate); ties break toward the lowest
+    index. ``vals``/``idxs`` are ordered by descending key — the exact
+    selection order of the Pallas kernel, so the two implementations are
+    comparable elementwise, not just as sets.
+    """
+    n = x.shape[0]
+    xp = _pad_to_block(x.astype(jnp.float32), block)
+    nb = xp.shape[0] // block
+    xb = xp.reshape(nb, block)
+    if k == 0:
+        return (
+            jnp.zeros((n,), jnp.float32),
+            jnp.zeros((nb, 0), jnp.float32),
+            jnp.zeros((nb, 0), jnp.int32),
+        )
+    key = jnp.where(jnp.isnan(xb), jnp.inf, jnp.abs(xb))
+    order = jnp.argsort(-key, axis=1, stable=True)[:, :k]
+    vals = jnp.take_along_axis(xb, order, axis=1)
+    dense = jnp.zeros_like(xb).at[jnp.arange(nb)[:, None], order].set(vals)
+    return dense.reshape(nb * block)[:n], vals, order.astype(jnp.int32)
+
+
+def scatter_acc_ref(vals: jax.Array, idxs: jax.Array, acc: jax.Array, w,
+                    block: int = 1024):
+    """acc + w * scatter(vals at block-local idxs) — oracle for the fused
+    top-k receive pass. vals/idxs: (nb, k) as produced by
+    :func:`topk_sparsify_ref` (indices unique within each block row);
+    acc: flat fp32, ``nb = ceil(len(acc)/block)``. Returns fp32 (len(acc),).
+    """
+    n = acc.shape[0]
+    accp = _pad_to_block(acc.astype(jnp.float32), block)
+    nb = accp.shape[0] // block
+    assert vals.shape == idxs.shape and vals.shape[0] == nb, (
+        vals.shape, idxs.shape, nb,
+    )
+    dense = (
+        jnp.zeros((nb, block), jnp.float32)
+        .at[jnp.arange(nb)[:, None], idxs]
+        .add(vals.astype(jnp.float32))
+    )
+    out = accp.reshape(nb, block) + jnp.asarray(w, jnp.float32) * dense
+    return out.reshape(nb * block)[:n]

@@ -21,6 +21,7 @@ out).
 
 from __future__ import annotations
 
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +38,65 @@ def _pad_to_block(x: jax.Array, block: int) -> jax.Array:
     if pad:
         x = jnp.pad(x, (0, pad))
     return x
+
+
+def _quant_scaled_kernel(x_ref, s_ref, q_ref):
+    x = x_ref[...].astype(jnp.float32)                    # (1, block)
+    q_ref[...] = jnp.clip(
+        jnp.round(x / s_ref[0, 0]), -127, 127
+    ).astype(jnp.int8)
+
+
+def _topk_kernel(k: int, x_ref, dense_ref, v_ref, i_ref):
+    """Blockwise top-|x| selection: k rounds of masked argmax over the tile.
+
+    Selection key is |x| with NaN ranked above +inf; ties break toward the
+    lowest index — the exact order of the stable descending argsort in
+    ``topk_sparsify_ref``, so vals/idxs match the oracle elementwise.
+    """
+    x = x_ref[...].astype(jnp.float32)                    # (1, block)
+    block = x.shape[1]
+    key = jnp.where(jnp.isnan(x), jnp.inf, jnp.abs(x))
+    col = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)  # (1, block)
+    out_pos = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def body(t, carry):
+        live, sel, vals, idxs = carry
+        hit = live == jnp.max(live)
+        # lowest index among the maxima (killed lanes hold key -1, below
+        # every remaining |x| >= 0, so they can never be re-picked)
+        idx_t = jnp.min(jnp.where(hit, col, block))
+        chosen = col == idx_t
+        v_t = jnp.sum(jnp.where(chosen, x, 0.0))
+        at_t = out_pos == t
+        return (
+            jnp.where(chosen, -1.0, live),
+            sel | chosen,
+            jnp.where(at_t, v_t, vals),
+            jnp.where(at_t, idx_t, idxs),
+        )
+
+    init = (
+        key,
+        jnp.zeros(x.shape, dtype=jnp.bool_),
+        jnp.zeros((1, k), jnp.float32),
+        jnp.zeros((1, k), jnp.int32),
+    )
+    _, sel, vals, idxs = jax.lax.fori_loop(0, k, body, init)
+    dense_ref[...] = jnp.where(sel, x, 0.0)
+    v_ref[...] = vals
+    i_ref[...] = idxs
+
+
+def _scatter_acc_kernel(v_ref, i_ref, acc_ref, w_ref, out_ref):
+    vals = v_ref[...].astype(jnp.float32)                 # (1, k)
+    idxs = i_ref[...]                                     # (1, k)
+    col = jax.lax.broadcasted_iota(jnp.int32, acc_ref.shape, 1)  # (1, block)
+    hit = idxs[0, :, None] == col[0, None, :]             # (k, block)
+    dense = jnp.sum(
+        jnp.where(hit, vals[0, :, None], 0.0), axis=0, keepdims=True
+    )
+    out_ref[...] = acc_ref[...] + w_ref[0, 0] * dense
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -120,9 +180,10 @@ def dequant_accumulate_fwd(
 ):
     """Fused receive side: ``acc + w * dequant(q, scales)`` in one pass.
 
-    q: int8 (n,); scales: fp32 (ceil(n/block),); acc: fp32 (n,); w: scalar
-    (the per-node Metropolis weight of the matching this payload arrived
-    on — a traced value inside shard_map). Returns fp32 (n,).
+    q: integer (n,) — int8 gossip payloads, or the quantize-once relay's
+    int16 partial sums; scales: fp32 (ceil(n/block),); acc: fp32 (n,);
+    w: scalar (the per-node Metropolis weight of the matching this payload
+    arrived on — a traced value inside shard_map). Returns fp32 (n,).
     """
     n = q.shape[0]
     q = _pad_to_block(q, block)
@@ -144,4 +205,128 @@ def dequant_accumulate_fwd(
         interpret=interpret,
         compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
     )(q.reshape(nb, block), scales.reshape(nb, 1), acc.reshape(nb, block), w2)
+    return out.reshape(nb * block)[:n]
+
+
+def quantize_scaled_fwd(
+    x: jax.Array,
+    scales: jax.Array,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+):
+    """Quantize with caller-supplied blockwise scales (one kernel pass).
+
+    The quantize-once relay contract: every node on a route encodes with
+    the SAME shared scales (``pmax`` of the local blockwise scales), so a
+    payload pays exactly one quantize/dequant pair end-to-end no matter how
+    many hops it rides. x: flat (n,); scales: fp32 (ceil(n/block),),
+    strictly positive. Returns q int8 (n,).
+    """
+    n = x.shape[0]
+    x = _pad_to_block(x.astype(jnp.float32), block)
+    nb = x.shape[0] // block
+    assert scales.shape[0] == nb, (scales.shape, nb, block)
+    q = pl.pallas_call(
+        _quant_scaled_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.int8),
+        interpret=interpret,
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+    )(x.reshape(nb, block), scales.reshape(nb, 1))
+    return q.reshape(nb * block)[:n]
+
+
+def topk_sparsify_fwd(
+    x: jax.Array,
+    k: int,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+):
+    """Fused blockwise top-k select+scatter: one pass emits the sparsified
+    dense buffer AND the wire payload, no host-side gather.
+
+    x: flat (n,) -> ``(dense (n,) fp32, vals (nb, k) fp32, idxs (nb, k)
+    int32 block-local)`` with ``nb = ceil(n/block)``; semantics (selection
+    key, NaN/tie order) match :func:`..ref.topk_sparsify_ref` bit-for-bit.
+    ``k`` is the static per-block budget, ``0 <= k <= block``.
+    """
+    if not 0 <= k <= block:
+        raise ValueError(f"per-block k must be in [0, {block}], got {k}")
+    n = x.shape[0]
+    x = _pad_to_block(x.astype(jnp.float32), block)
+    nb = x.shape[0] // block
+    if k == 0:
+        # zero-size VMEM tiles are not a thing; the empty payload is static
+        return (
+            jnp.zeros((n,), jnp.float32),
+            jnp.zeros((nb, 0), jnp.float32),
+            jnp.zeros((nb, 0), jnp.int32),
+        )
+    dense, vals, idxs = pl.pallas_call(
+        functools.partial(_topk_kernel, k),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, block), jnp.float32),
+            jax.ShapeDtypeStruct((nb, k), jnp.float32),
+            jax.ShapeDtypeStruct((nb, k), jnp.int32),
+        ],
+        interpret=interpret,
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+    )(x.reshape(nb, block))
+    return dense.reshape(nb * block)[:n], vals, idxs
+
+
+def scatter_accumulate_fwd(
+    vals: jax.Array,
+    idxs: jax.Array,
+    acc: jax.Array,
+    w: jax.Array,
+    *,
+    block: int = 1024,
+    interpret: bool = False,
+):
+    """Fused top-k receive side: ``acc + w * scatter(vals at idxs)`` in one
+    pass over the buffer — the dense contribution never materializes in HBM.
+
+    vals/idxs: (nb, k) as produced by :func:`topk_sparsify_fwd` (indices
+    unique within each block row); acc: flat fp32 with
+    ``nb = ceil(len(acc)/block)``; w: scalar. Returns fp32 (len(acc),).
+    """
+    n = acc.shape[0]
+    acc = _pad_to_block(acc.astype(jnp.float32), block)
+    nb = acc.shape[0] // block
+    assert vals.shape == idxs.shape and vals.shape[0] == nb, (
+        vals.shape, idxs.shape, nb,
+    )
+    k = vals.shape[1]
+    if k == 0:
+        return acc.reshape(nb * block)[:n]
+    w2 = jnp.asarray(w, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _scatter_acc_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, block), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(dimension_semantics=("parallel",)),
+    )(vals, idxs, acc.reshape(nb, block), w2)
     return out.reshape(nb * block)[:n]

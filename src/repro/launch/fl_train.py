@@ -136,6 +136,86 @@ def build_fl_round(
     return jax.jit(fn, donate_argnums=(0,))
 
 
+def build_hierarchical_fl_round(
+    cfg: ModelConfig,
+    opt_cfg: adamw.OptConfig,
+    mesh: Mesh,
+    n_pods: int,
+    n_data: int,
+    fl_cfg: FLConfig,
+    intra_rel: Relation,
+    inter_rel: Relation,
+    pod_axis: str = "pod",
+    data_axis: str = "data",
+) -> Callable:
+    """One hierarchical (pod × data) FL round: ``local_steps`` SGD steps on
+    node-local data, then two-level fused gossip — ``intra_rel`` over the
+    data axis inside each pod, ``inter_rel`` over the pod axis across pods
+    (:func:`repro.core.fused.fused_hierarchical_round`). ``mesh`` must be a
+    2D ``(pod_axis, data_axis)`` mesh of ``n_pods × n_data`` devices; state
+    and batches carry a leading node axis sharded over BOTH mesh axes.
+
+    ``fl_cfg.compression`` selects the fused wire format per level:
+    ``"none"`` (f32 buffers) or ``"int8"`` (quantize-once blockwise via the
+    tdm_compress kernels; 2 permutes per matching per bucket — the
+    :func:`repro.telemetry.expected_hierarchical_collectives` oracle).
+    Returns a jit'd (stacked_state, stacked_batch) -> (stacked_state,
+    losses) function with the :func:`build_fl_round` contract."""
+    from repro.core import fused as fused_lib
+
+    b = registry.bundle(cfg)
+    if fl_cfg.compression not in ("none", "int8"):
+        raise ValueError(
+            f"hierarchical FL supports compression 'none'/'int8', "
+            f"got {fl_cfg.compression!r}"
+        )
+
+    def node_round(state, batch):
+        state = jax.tree.map(lambda x: x[0], state)
+        batch = jax.tree.map(lambda x: x[0], batch)
+
+        def one_step(st, mb):
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: b.loss_fn(p, mb), has_aux=True
+            )(st["params"])
+            new_p, new_opt, _ = adamw.apply_updates(
+                st["params"], grads, st["opt"], opt_cfg
+            )
+            return {"params": new_p, "opt": new_opt, "step": st["step"] + 1}, loss
+
+        losses = []
+        for h in range(fl_cfg.local_steps):
+            mb = jax.tree.map(lambda x: x[h], batch)
+            state, loss = one_step(state, mb)
+            losses.append(loss)
+        local_loss = jnp.stack(losses).mean()
+
+        params = fused_lib.fused_hierarchical_round(
+            state["params"],
+            intra_rel,
+            inter_rel,
+            data_axis,
+            pod_axis,
+            n_data,
+            n_pods,
+            compression=fl_cfg.compression,
+        )
+        state = dict(state, params=params)
+
+        state = jax.tree.map(lambda x: x[None], state)
+        return state, local_loss[None]
+
+    spec_state = P((pod_axis, data_axis))
+    fn = shard_map(
+        node_round,
+        mesh=mesh,
+        in_specs=(spec_state, spec_state),
+        out_specs=(spec_state, P((pod_axis, data_axis))),
+        check_rep=False,  # same reason as build_fl_round (+ pallas int8 path)
+    )
+    return jax.jit(fn, donate_argnums=(0,))
+
+
 class RoundFnCache:
     """Compiled FL-round functions keyed by slot relation.
 
@@ -168,9 +248,11 @@ class RoundFnCache:
     ) -> Optional[Dict[str, int]]:
         """Static per-round collective oracle for ``rel``, memoized on the
         cache key. ``None`` when no proven oracle covers the config (only
-        the fused getMeas TDM path has one; mixed-dtype compressed params
-        are out of scope — the scale/index sidecar count is per FLOAT
-        bucket, not per bucket)."""
+        the fused getMeas TDM path has one). Mixed-dtype compressed params
+        ARE covered: the per-bucket formula is uniform — every dtype
+        bucket pays the same sidecar structure (int8 ships payload+scales
+        per bucket, fused top-k packs values+indices into one payload per
+        bucket), so the count is ``matchings × per × n_buckets``."""
         key = tuple(sorted(rel.pairs))
         if key in self._expected:
             return self._expected[key]
@@ -182,10 +264,9 @@ class RoundFnCache:
             n_buckets = len(
                 {leaf.dtype.name for leaf in jax.tree.leaves(state["params"])}
             )
-            if fl_cfg.compression == "none" or n_buckets == 1:
-                exp = telemetry.expected_tdm_collectives(
-                    rel, n_buckets, compression=fl_cfg.compression
-                )
+            exp = telemetry.expected_tdm_collectives(
+                rel, n_buckets, compression=fl_cfg.compression
+            )
         self._expected[key] = exp
         return exp
 
@@ -385,7 +466,9 @@ class GroundSegConfig:
                            the sync cadence (and through satellites whose
                            routes migrate between sinks as orbits advance).
     compression: relay payload encoding ('none' | 'int8' — blockwise via
-                 the Pallas tdm_compress kernels, re-quantized per hop).
+                 the tdm_compress kernels, quantized ONCE end-to-end:
+                 pmax-shared scales, exact int16 relay sums on the wire,
+                 single dequant at the sink).
     pipeline_depth: 1 — one-shot rounds: uplink then downlink traverse the
                     window sequentially (the PR 4 path, bit-for-bit when
                     ``max_staleness_windows == 0``). 2 — pipelined: round

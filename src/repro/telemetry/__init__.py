@@ -30,6 +30,7 @@ from repro.telemetry.reconcile import (
     compare,
     compile_and_check,
     compiled_collective_counts,
+    expected_hierarchical_collectives,
     expected_tdm_collectives,
 )
 from repro.telemetry.recorder import (
@@ -56,6 +57,7 @@ __all__ = [
     "compile_and_check",
     "compiled_collective_counts",
     "counters_snapshot",
+    "expected_hierarchical_collectives",
     "expected_tdm_collectives",
     "get_recorder",
     "metrics_snapshot",

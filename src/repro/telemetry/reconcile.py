@@ -160,14 +160,46 @@ def expected_tdm_collectives(
     compression: str = "none",
 ) -> Dict[str, int]:
     """Static oracle for ONE fused TDM-FLA gossip round: the relation's
-    matchings each cost one collective-permute per dtype bucket —
-    two for int8 (payload + blockwise scales) and top-k/CHOCO (values +
-    indices) — independent of the model's leaf count (the PR 3 claim,
-    HLO-verified offline in ``tests/_fused_worker.py``)."""
+    matchings each cost one collective-permute per dtype bucket — two for
+    int8 (payload + blockwise scales travel separately), ONE for top-k/CHOCO
+    (values and block-local indices are packed into a single int32 payload
+    by the fused ``topk_sparsify`` path) — independent of the model's leaf
+    count (the PR 3 claim, HLO-verified offline in
+    ``tests/_fused_worker.py``). The count is per BUCKET uniformly: every
+    dtype bucket pays the same sidecar structure, which is what lets the
+    oracle cover mixed-dtype compressed params."""
     from repro.core import tdm
 
     if len(rel) == 0:
         return {"collective-permute": 0}
-    per = 2 if compression in ("int8", "topk") else 1
+    per = 2 if compression == "int8" else 1
     matchings = len(tdm.edge_coloring(rel))
     return {"collective-permute": matchings * per * int(n_buckets)}
+
+
+def expected_hierarchical_collectives(
+    intra_rel,
+    inter_rel,
+    n_buckets: int,
+    *,
+    compression: str = "none",
+) -> Dict[str, int]:
+    """Static oracle for one fused hierarchical (pod × data) round: the two
+    levels gossip independently, so their per-level TDM counts add —
+    ``(M_intra + M_inter) × per × n_buckets`` with ``per = 2`` for int8
+    (:func:`repro.core.fused.fused_hierarchical_round`)."""
+    if compression not in ("none", "int8"):
+        raise ValueError(
+            f"hierarchical gossip has no oracle for compression "
+            f"{compression!r} (only 'none'/'int8' are lowered)"
+        )
+    intra = expected_tdm_collectives(
+        intra_rel, n_buckets, compression=compression
+    )
+    inter = expected_tdm_collectives(
+        inter_rel, n_buckets, compression=compression
+    )
+    return {
+        "collective-permute": intra["collective-permute"]
+        + inter["collective-permute"]
+    }

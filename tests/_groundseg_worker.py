@@ -187,6 +187,75 @@ def test_fedavg_numerics():
 
 
 # ---------------------------------------------------------------------------
+# 3b. quantize-once relay: the SAME payloads delivered over a 3-hop chain
+#     and over direct 1-hop slots produce BIT-IDENTICAL sink aggregates —
+#     quantization error is paid once per route, independent of hop count —
+#     and the aggregate equals a single-quantization numpy replay
+# ---------------------------------------------------------------------------
+def test_int8_relay_hop_count_independent():
+    from repro.kernels.tdm_compress import ref as q_ref
+
+    # B: 0 -> 1 -> 2 -> sink6 (payloads merge along the chain, 3 hops for
+    # sat 0); A: the same three payloads ride direct 1-hop slots
+    slots_chain = [
+        Relation.from_edges([(0, 1)], nodes=range(N)),
+        Relation.from_edges([(1, 2)], nodes=range(N)),
+        Relation.from_edges([(2, 6)], nodes=range(N)),
+    ]
+    slots_direct = [
+        Relation.from_edges([(0, 6)], nodes=range(N)),
+        Relation.from_edges([(1, 6)], nodes=range(N)),
+        Relation.from_edges([(2, 6)], nodes=range(N)),
+    ]
+    rng = np.random.default_rng(11)
+    tree = {"w": jnp.asarray(rng.normal(size=(N, 96)).astype(np.float32))}
+    outs = {}
+    for name, slots in (("chain", slots_chain), ("direct", slots_direct)):
+        up = routing.build_relay_program(slots, N, SINKS)
+        down = routing.build_broadcast_program(slots, N, SINKS)
+        assert set().union(*up.delivered.values()) == {0, 1, 2}
+
+        def body(t, up=up, down=down):
+            t = jax.tree.map(lambda x: x[0], t)
+            out = aggregation.groundseg_round(
+                t, up, down, "node", pool=True, compression="int8",
+                quant_impl="ref",
+            )
+            return jax.tree.map(lambda x: x[None], out)
+
+        fn = jax.jit(
+            shard_map(body, mesh=mesh, in_specs=(P("node"),),
+                      out_specs=P("node"), check_rep=False)
+        )
+        outs[name] = np.asarray(fn(tree)["w"])
+    # hop-count independence: the sinks' pooled global after 3-hop delivery
+    # == after 1-hop delivery, bit for bit (the downlink floods differ in
+    # reach between the two schedules, so only sink lanes are comparable)
+    assert np.array_equal(outs["chain"][[6, 7]], outs["direct"][[6, 7]])
+    # single-encode replay: shared scales are the pmax of every node's
+    # blockwise scales; each delivered payload is quantized exactly once
+    x = np.asarray(tree["w"])
+    scales = np.max(
+        [np.asarray(q_ref.blockwise_scales_ref(jnp.asarray(x[v]))) for v in
+         range(N)],
+        axis=0,
+    )
+    q = np.clip(np.rint(x / scales), -127, 127)
+    want = (x[6] + (q[0] + q[1] + q[2]) * scales + x[7]) / 5.0
+    got = outs["chain"][6]
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    err = np.linalg.norm(got - (x[[0, 1, 2, 6, 7]].sum(0) / 5.0)) / max(
+        np.linalg.norm(got), 1e-9
+    )
+    assert err < 0.02, err
+    check(
+        f"int8 relay: 3-hop == 1-hop bit-identical (single quantize/dequant "
+        f"pair per route; vs exact FedAvg rel-err {err:.4f} < 2%)",
+        True,
+    )
+
+
+# ---------------------------------------------------------------------------
 # 4. acceptance: hierarchical FL over the Walker constellation with 2 ground
 #    sinks — consensus distance decreases across rounds, centralized ends in
 #    exact consensus on covered nodes, and the cost oracle emits sane
@@ -345,25 +414,31 @@ def test_pipelined_bit_identical_at_trivial_config():
     tree = {"w": jnp.asarray(rng.normal(size=(N, 129)).astype(np.float32)),
             "b": jnp.asarray(rng.normal(size=(N, 7)).astype(np.float32))}
     for pool in (True, False):
-        def old_body(t, pool=pool):
-            t = jax.tree.map(lambda x: x[0], t)
-            out = aggregation.groundseg_round(t, up, down, "node", pool=pool)
-            return jax.tree.map(lambda x: x[None], out)
+        for compression in ("none", "int8"):
+            def old_body(t, pool=pool, compression=compression):
+                t = jax.tree.map(lambda x: x[0], t)
+                out = aggregation.groundseg_round(
+                    t, up, down, "node", pool=pool, compression=compression,
+                    quant_impl="ref",
+                )
+                return jax.tree.map(lambda x: x[None], out)
 
-        f_old = jax.jit(shard_map(
-            old_body, mesh=mesh, in_specs=(P("node"),), out_specs=P("node"),
-            check_rep=False,
-        ))
-        carry, pend = _zero_aux(tree)
-        y_old = f_old(tree)
-        y_new, nc, _ = _window_fn(wp, pool=pool)(tree, carry, pend)
-        for k in tree:
-            assert np.array_equal(np.asarray(y_old[k]), np.asarray(y_new[k])), (
-                pool, k,
+            f_old = jax.jit(shard_map(
+                old_body, mesh=mesh, in_specs=(P("node"),),
+                out_specs=P("node"), check_rep=False,
+            ))
+            carry, pend = _zero_aux(tree)
+            y_old = f_old(tree)
+            y_new, nc, _ = _window_fn(wp, pool=pool, compression=compression)(
+                tree, carry, pend
             )
-        assert all(not np.asarray(v).any() for v in nc.values())
+            for k in tree:
+                assert np.array_equal(
+                    np.asarray(y_old[k]), np.asarray(y_new[k])
+                ), (pool, compression, k)
+            assert all(not np.asarray(v).any() for v in nc.values())
     check("pipelined engine bit-identical to the one-shot path at "
-          "depth 1 / staleness 0 (pooled and regional)", True)
+          "depth 1 / staleness 0 (pooled and regional, none and int8)", True)
 
 
 def test_pipelined_hlo_collective_counts():
@@ -478,6 +553,7 @@ if __name__ == "__main__":
     test_router_full_delivery()
     test_hlo_relay_collective_counts()
     test_fedavg_numerics()
+    test_int8_relay_hop_count_independent()
     test_hierarchical_fl_converges()
     test_centralized_exact_consensus_on_covered()
     test_dead_satellite_skip_slot()

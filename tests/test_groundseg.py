@@ -159,8 +159,10 @@ def test_expected_collectives_math():
     down = routing.build_broadcast_program(chain_slots(), 4, [3])
     want = aggregation.expected_collectives(up, down, 2, compression="int8",
                                             pool=True)
-    # 3 uplink batches + 2 downlink batches, x2 buffers x2 (payload+scales)
-    assert want == {"collective-permute": 20, "all-reduce": 2}
+    # quantize-once int8: uplink relays int16 sums (1 permute per batch),
+    # downlink ships payload+scales (2 per batch) -> (3 + 2*2) x2 buffers;
+    # all-reduces: 1 pmax (shared scales) + 1 pool psum, per buffer
+    assert want == {"collective-permute": 14, "all-reduce": 4}
     assert aggregation.expected_collectives(up, down, 1)["collective-permute"] == 5
 
 

@@ -1,11 +1,22 @@
 """Per-kernel validation: sweep shapes/dtypes, assert_allclose against the
 ref.py pure-jnp oracles. Kernels run in interpret=True mode (the container
-is CPU; TPU is the compile target)."""
+is CPU; TPU is the compile target).
+
+The ``tdm_compress`` family additionally gets a DIFFERENTIAL suite: the
+Pallas kernels must match the jnp oracles BIT FOR BIT across random shapes
+× k × block (via the proptest shim) and adversarial edges (ragged tails,
+k=0, k=block, all-equal magnitudes, NaN/inf payloads). Both sides run
+under ``jax.jit`` — XLA contracts ``a + w*v`` into an FMA under jit but
+not in eager op-by-op execution, so comparing a jitted kernel against an
+eager oracle shows spurious 1-ulp diffs that say nothing about the kernel.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from proptest import given, st_choice, st_int
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
@@ -271,3 +282,149 @@ def test_dequant_accumulate_matches_ref(n, block, w):
     want = q_ref.dequant_acc_ref(q, s, acc, w, block=block)
     assert got.shape == (n,)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# differential suite: tdm_compress Pallas kernels ≡ jnp oracles, bit for bit
+# ---------------------------------------------------------------------------
+# Kernel side goes through the jitted q_ops wrappers (interpret mode on
+# CPU); oracle side gets its own jit so both see identical XLA arithmetic
+# (FMA contraction — see the module docstring).
+
+_ref_quantize = jax.jit(q_ref.quantize_ref, static_argnames=("block",))
+_ref_quant_scaled = jax.jit(
+    q_ref.quantize_scaled_ref, static_argnames=("block",)
+)
+_ref_dequant_acc = jax.jit(q_ref.dequant_acc_ref, static_argnames=("block",))
+_ref_topk = jax.jit(
+    q_ref.topk_sparsify_ref, static_argnums=(1,), static_argnames=("block",)
+)
+_ref_scatter_acc = jax.jit(q_ref.scatter_acc_ref, static_argnames=("block",))
+
+
+def _payload(seed: int, n: int, kind: str) -> np.ndarray:
+    """Adversarial payload generator: 'normal' random scales, 'ties' holds
+    only ±1 (every magnitude equal — selection must break toward the lowest
+    index), 'edge' sprinkles NaN/±inf through a normal payload."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * rng.uniform(0.1, 10.0)).astype(np.float32)
+    if kind == "ties":
+        x = np.where(x >= 0, np.float32(1.0), np.float32(-1.0))
+    elif kind == "edge":
+        m = rng.random(n)
+        x[m < 0.05] = np.nan
+        x[(m >= 0.05) & (m < 0.10)] = np.inf
+        x[(m >= 0.10) & (m < 0.15)] = -np.inf
+    return x
+
+
+def _assert_topk_equal(x: np.ndarray, k: int, block: int) -> None:
+    dense, vals, idxs = q_ops.topk_sparsify(
+        jnp.asarray(x), k=k, block=block, interpret=True
+    )
+    dense_w, vals_w, idxs_w = _ref_topk(jnp.asarray(x), k, block=block)
+    nb = -(-x.shape[0] // block)
+    assert dense.shape == (x.shape[0],)
+    assert vals.shape == idxs.shape == (nb, k)
+    # assert_array_equal treats positionally-matching NaNs as equal, so
+    # NaN-carrying payloads still compare bit-for-bit
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(dense_w))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals_w))
+    np.testing.assert_array_equal(np.asarray(idxs), np.asarray(idxs_w))
+
+
+@given(
+    st_int(1, 2500),
+    st_int(0, 128),
+    st_choice([128, 256]),
+    st_choice(["normal", "ties", "edge"]),
+    cases=12,
+)
+def test_topk_sparsify_differential(n, k, block, kind):
+    _assert_topk_equal(_payload(n * 7 + k, n, kind), min(k, block), block)
+
+
+@pytest.mark.parametrize(
+    "n,k,block,kind",
+    [
+        (1023, 7, 1024, "normal"),     # ragged tail inside one block
+        (1025, 5, 1024, "edge"),       # ragged tail spilling a second block
+        (256, 0, 256, "normal"),       # k = 0: empty payload, zero dense
+        (256, 256, 256, "ties"),       # k = block = n: everything selected
+        (64, 64, 256, "edge"),         # k = n < block with NaN/inf
+        (1, 1, 64, "normal"),          # single element
+        (500, 32, 128, "ties"),        # all-equal magnitudes, ragged
+    ],
+)
+def test_topk_sparsify_adversarial_edges(n, k, block, kind):
+    _assert_topk_equal(_payload(n + k, n, kind), k, block)
+
+
+@given(
+    st_int(1, 2500),
+    st_int(0, 96),
+    st_choice([128, 256]),
+    st_choice(["normal", "ties", "edge"]),
+    cases=10,
+)
+def test_scatter_accumulate_differential(n, k, block, kind):
+    k = min(k, block)
+    x = _payload(n * 13 + k, n, kind)
+    rng = np.random.default_rng(n + 1)
+    acc = rng.standard_normal(n).astype(np.float32)
+    w = np.float32(rng.uniform(-1.5, 1.5))
+    _, vals, idxs = _ref_topk(jnp.asarray(x), k, block=block)
+    got = q_ops.scatter_accumulate(
+        vals, idxs, jnp.asarray(acc), w, block=block, interpret=True
+    )
+    want = _ref_scatter_acc(vals, idxs, jnp.asarray(acc), w, block=block)
+    assert got.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st_int(1, 3000), st_choice([128, 256, 512]), cases=10)
+def test_quantize_scaled_differential(n, block):
+    """Shared-scale encode (the quantize-once relay's send side): kernel ==
+    oracle exactly, under pmax-style scales ≥ the local blockwise scales."""
+    x = _payload(n, n, "normal")
+    rng = np.random.default_rng(n + 2)
+    scales = np.asarray(q_ref.blockwise_scales_ref(jnp.asarray(x), block=block))
+    shared = (scales * rng.uniform(1.0, 3.0, size=scales.shape)).astype(
+        np.float32
+    )
+    got = q_ops.quantize_scaled(
+        jnp.asarray(x), jnp.asarray(shared), block=block, interpret=True
+    )
+    want = _ref_quant_scaled(jnp.asarray(x), jnp.asarray(shared), block=block)
+    assert got.dtype == jnp.int8 and got.shape == (n,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st_int(1, 3000), st_choice([128, 256, 512]), cases=10)
+def test_quantize_differential_bitwise(n, block):
+    x = _payload(n * 3, n, "normal")
+    q, s, _ = q_ops.quantize_payload(jnp.asarray(x), block=block, interpret=True)
+    q_w, s_w = _ref_quantize(jnp.asarray(x), block=block)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_w))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_w))
+
+
+@given(st_int(1, 2500), st_choice([128, 256]), st_choice([1, 6]), cases=10)
+def test_dequant_accumulate_int16_differential(n, block, sources):
+    """Integer-domain relay sums: int16 q (up to ±127×sources, the
+    quantize-once relay's wire format) dequantize+accumulate bit-for-bit."""
+    rng = np.random.default_rng(n * 5 + sources)
+    lim = 127 * sources
+    q = rng.integers(-lim, lim + 1, size=n).astype(np.int16)
+    nb = -(-n // block)
+    s = rng.uniform(1e-4, 0.5, size=nb).astype(np.float32)
+    acc = rng.standard_normal(n).astype(np.float32)
+    w = np.float32(rng.uniform(-1.0, 1.0))
+    got = q_ops.dequant_accumulate(
+        jnp.asarray(q), jnp.asarray(s), jnp.asarray(acc), w,
+        block=block, interpret=True,
+    )
+    want = _ref_dequant_acc(
+        jnp.asarray(q), jnp.asarray(s), jnp.asarray(acc), w, block=block
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -251,14 +251,75 @@ def test_expected_tdm_collectives_math():
     assert telemetry.expected_tdm_collectives(rel, 2) == {
         "collective-permute": 2 * m
     }
-    for comp in ("int8", "topk"):
-        assert telemetry.expected_tdm_collectives(rel, 1, compression=comp) == {
-            "collective-permute": 2 * m
-        }
+    # int8 ships payload + scales (2 per matching); fused top-k packs
+    # values + indices into ONE int32 payload (1 per matching)
+    assert telemetry.expected_tdm_collectives(rel, 1, compression="int8") == {
+        "collective-permute": 2 * m
+    }
+    assert telemetry.expected_tdm_collectives(rel, 1, compression="topk") == {
+        "collective-permute": m
+    }
+    assert telemetry.expected_tdm_collectives(rel, 3, compression="topk") == {
+        "collective-permute": 3 * m
+    }
     empty = Relation.empty(range(4))
     assert telemetry.expected_tdm_collectives(empty, 3) == {
         "collective-permute": 0
     }
+
+
+def test_expected_hierarchical_collectives_math():
+    from repro.core import tdm
+
+    intra = Relation.clique(list(range(4)))
+    inter = ring(2)
+    mi = len(tdm.edge_coloring(intra))
+    mo = len(tdm.edge_coloring(inter))
+    assert telemetry.expected_hierarchical_collectives(intra, inter, 1) == {
+        "collective-permute": mi + mo
+    }
+    assert telemetry.expected_hierarchical_collectives(
+        intra, inter, 2, compression="int8"
+    ) == {"collective-permute": 2 * 2 * (mi + mo)}
+    with pytest.raises(ValueError):
+        telemetry.expected_hierarchical_collectives(
+            intra, inter, 1, compression="topk"
+        )
+
+
+def test_round_fn_cache_oracle_covers_mixed_dtype_compressed():
+    """RoundFnCache.expected_collectives no longer skips mixed-dtype
+    compressed params: the per-bucket count is uniform, so every fused
+    getMeas TDM config gets a real oracle (reconcile never counts a skip)."""
+    import ml_dtypes
+    import numpy as np
+
+    from repro.core import tdm
+    from repro.launch import fl_train
+
+    rel = ring(8)
+    m = len(tdm.edge_coloring(rel))
+    state = {
+        "params": {
+            "w": np.zeros((4, 4), np.float32),
+            "h": np.zeros((8,), ml_dtypes.bfloat16),
+            "b": np.zeros((3,), np.float32),
+        }
+    }
+    per = {"none": 1, "int8": 2, "topk": 1}
+    for comp, p in per.items():
+        fl_cfg = fl_train.FLConfig(mode="tdm", compression=comp, fused=True)
+        cache = fl_train.RoundFnCache(None, None, None, 8, fl_cfg)
+        exp = cache.expected_collectives(rel, state)
+        assert exp == {"collective-permute": p * m * 2}, (comp, exp)
+    # non-fused / get1meas configs still have no proven oracle
+    for fl_cfg in (
+        fl_train.FLConfig(mode="tdm", fused=False),
+        fl_train.FLConfig(mode="tdm", comm="get1meas"),
+        fl_train.FLConfig(mode="centralized"),
+    ):
+        cache = fl_train.RoundFnCache(None, None, None, 8, fl_cfg)
+        assert cache.expected_collectives(rel, state) is None
 
 
 # ------------------------------------------------- router dropped_log bounds
@@ -383,6 +444,86 @@ def test_check_regression_reads_summaries_and_dirs(tmp_path):
         rows, rows, ("permutes",), 0.2
     )
     assert not failures and checked == 1
+
+
+def test_check_regression_telemetry_diff_direction_agnostic():
+    from benchmarks import check_regression
+
+    base = {"fl.permutes": 24.0, "fl.rounds": 4.0, "fl.skipped": 0.0}
+    # identical counters: clean
+    failures, table = check_regression.compare_telemetry(base, dict(base), 0.2)
+    assert failures == []
+    assert all(r[6] == "ok" for r in table)
+    # drift UP and drift DOWN both fail (schedule changed either way)
+    up = dict(base, **{"fl.permutes": 48.0})
+    down = dict(base, **{"fl.permutes": 12.0})
+    for run in (up, down):
+        failures, table = check_regression.compare_telemetry(base, run, 0.2)
+        assert len(failures) == 1 and "fl.permutes" in failures[0]
+        assert any(r[2] == "fl.permutes" and r[6] == "DRIFTED" for r in table)
+    # within threshold: clean
+    failures, _ = check_regression.compare_telemetry(
+        base, dict(base, **{"fl.permutes": 26.0}), 0.2
+    )
+    assert failures == []
+    # zero baseline -> nonzero is drift; missing counter fails; run-only
+    # counters are reported as new but don't fail
+    failures, table = check_regression.compare_telemetry(
+        base, {"fl.permutes": 24.0, "fl.skipped": 2.0, "extra": 1.0}, 0.2
+    )
+    msgs = "\n".join(failures)
+    assert "fl.skipped" in msgs and "zero baseline" in msgs
+    assert "fl.rounds" in msgs and "missing" in msgs
+    assert len(failures) == 2
+    assert any(r[2] == "extra" and r[6] == "new" for r in table)
+    # prefix filter gates which counters can fail
+    failures, _ = check_regression.compare_telemetry(
+        base, {"fl.permutes": 999.0, "fl.rounds": 4.0, "fl.skipped": 0.0},
+        0.2, prefix="fl.rounds",
+    )
+    assert failures == []
+
+
+def test_check_regression_telemetry_loading_and_exit_code(tmp_path, capsys):
+    from benchmarks import check_regression
+
+    rows = [{"bench": "b", "cell": "c", "permutes": 4}]
+    base = tmp_path / "base"
+    run = tmp_path / "run"
+    base.mkdir()
+    run.mkdir()
+    (base / "BENCH_a.json").write_text(json.dumps(
+        {"bench": "a", "rows": rows, "telemetry": {"fl.permutes": 24}}
+    ))
+    (base / "BENCH_b.json").write_text(json.dumps(
+        {"bench": "b", "rows": [], "telemetry": {"fl.permutes": 6, "x": 1}}
+    ))
+    # directory load sums counters across summaries
+    assert check_regression.load_telemetry(str(base)) == {
+        "fl.permutes": 30.0, "x": 1.0
+    }
+    # plain row-list files carry no counters
+    (tmp_path / "plain.json").write_text(json.dumps(rows))
+    assert check_regression.load_telemetry(str(tmp_path / "plain.json")) == {}
+
+    # injected counter drift fails the job end-to-end (exit code 1)
+    (run / "BENCH_a.json").write_text(json.dumps(
+        {"bench": "a", "rows": rows, "telemetry": {"fl.permutes": 24}}
+    ))
+    (run / "BENCH_b.json").write_text(json.dumps(
+        {"bench": "b", "rows": [], "telemetry": {"fl.permutes": 18, "x": 1}}
+    ))
+    rc = check_regression.main(
+        ["--run", str(run), "--baseline", str(base)]
+    )
+    out = capsys.readouterr().out
+    assert rc == 1 and "fl.permutes" in out and "drifted" in out
+    # same run with --no-telemetry (rows match): clean
+    rc = check_regression.main(
+        ["--run", str(run), "--baseline", str(base), "--no-telemetry"]
+    )
+    capsys.readouterr()
+    assert rc == 0
 
 
 # ------------------------------------------------------- multidevice worker
