@@ -14,6 +14,9 @@ the framework's own perf tables.
   pipeline    pipelined multi-window groundseg rounds: depth x window x
               staleness throughput sweep + HLO-checked measured window
               (subprocess: 8 devs)
+  plan_synthesis  mega-constellation plan synthesis: vectorized geometry /
+              visibility / windows / routing-DP pipeline vs the retained
+              legacy oracles (wall time + speedups)
   roofline    the 40-cell dry-run roofline table (reads experiments/dryrun)
 
 ``python -m benchmarks.run``            runs everything quick
@@ -224,6 +227,15 @@ def main(argv=None):
             timeout=3600,
             name="pipeline",
             out_dir=out_dir,
+        )
+
+    if want("plan_synthesis"):
+        _banner("plan_synthesis: mega-constellation plan pipeline vs legacy")
+        from benchmarks import plan_synthesis
+        _inproc_bench(
+            "plan_synthesis",
+            lambda: plan_synthesis.main(["--full"] if args.full else ["--smoke"]),
+            out_dir,
         )
 
     if want("roofline"):

@@ -27,8 +27,8 @@ import numpy as np
 
 from repro.constellation import links as links_lib
 from repro.constellation import orbits as orbits_lib
-from repro.constellation.links import Edge, Link, LinkBudget
-from repro.constellation.orbits import GroundStation, WalkerDelta
+from repro.constellation.links import Edge, Link, LinkBudget, VisibilityMatrix
+from repro.constellation.orbits import Geometry, GroundStation, MultiShell, WalkerDelta
 from repro.core.relation import Relation
 from repro.core.schedule import TDMSchedule, antenna_constrained
 
@@ -52,12 +52,23 @@ def _antenna_map(antennas: AntennaSpec, nodes: Iterable[int]) -> Dict[int, int]:
     return {v: antennas.get(v, 1) for v in nodes}
 
 
-def plus_grid_candidates(geom: WalkerDelta, cross_plane: bool = True) -> List[Edge]:
+def plus_grid_candidates(geom: Geometry, cross_plane: bool = True) -> List[Edge]:
     """The +grid ISL candidate set: each satellite's terminals point at its
     intra-plane fore/aft neighbors and (optionally) the same-slot satellite
     in each adjacent plane. Geometry still gates every candidate — a
-    candidate pair with the Earth in between produces no contact."""
-    edges: List[Edge] = []
+    candidate pair with the Earth in between produces no contact.
+
+    A :class:`MultiShell` gets the union of its shells' +grids (node ids
+    offset per shell); inter-shell ISLs need an explicit candidate list."""
+    if isinstance(geom, MultiShell):
+        edges: List[Edge] = []
+        for off, shell in zip(geom.shell_offsets(), geom.shells):
+            edges.extend(
+                (a + off, b + off)
+                for a, b in plus_grid_candidates(shell, cross_plane)
+            )
+        return edges
+    edges = []
     s = geom.per_plane
     for p in range(geom.planes):
         for k in range(s):
@@ -66,6 +77,18 @@ def plus_grid_candidates(geom: WalkerDelta, cross_plane: bool = True) -> List[Ed
             if cross_plane and geom.planes > 1:
                 edges.append((geom.node_id(p, k), geom.node_id((p + 1) % geom.planes, k)))
     return sorted({(min(a, b), max(a, b)) for a, b in edges if a != b})
+
+
+def sat_ground_candidates(geom: Geometry, n_ground: int) -> List[Edge]:
+    """Every satellite × ground-station candidate pair (gateway downlinks).
+
+    Ground stations occupy node ids ``geom.total .. geom.total+n_ground-1``
+    (the :func:`repro.constellation.orbits.propagate` layout). Combine with
+    :func:`plus_grid_candidates` to plan a constellation whose terminals are
+    fixed +grid ISLs plus steerable ground feeders — the elevation mask and
+    link budget still gate every pair."""
+    n = geom.total
+    return [(s, n + g) for g in range(n_ground) for s in range(n)]
 
 
 @dataclass(frozen=True)
@@ -179,10 +202,42 @@ class ContactPlan:
     times: Tuple[float, ...]
     graphs: Tuple[Dict[Edge, Link], ...]
     step_s: float
+    # Batched (T, E) link physics when the plan came through the vectorized
+    # pipeline — lets windows() run as an array pass instead of per-step
+    # dict scans. Pure acceleration metadata: excluded from equality so a
+    # plan with and without it is the same plan.
+    matrix: Optional[VisibilityMatrix] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+
+    # -------------------------------------------------- lazy graph backing
+    @property
+    def _graphs_deferred(self) -> bool:
+        """True for a matrix-backed plan built with ``with_graphs=False`` —
+        windows/relations/routing run off the arrays; the per-step Link
+        dicts only get materialized if something (the scheduler) needs
+        them."""
+        return (
+            not self.graphs
+            and self.matrix is not None
+            and self.matrix.n_steps > 0
+        )
+
+    def with_graphs(self) -> "ContactPlan":
+        """Materialize the per-step ``{edge: Link}`` dicts from the matrix
+        (no-op when they are already present)."""
+        if not self._graphs_deferred:
+            return self
+        return dataclasses.replace(self, graphs=tuple(self.matrix.graphs()))
 
     # ----------------------------------------------------------- relations
     def relation(self, t_index: int) -> Relation:
         """The (possibly empty) exchange relation at one time step."""
+        if self._graphs_deferred:
+            vm = self.matrix
+            live = np.flatnonzero(vm.visible[t_index])
+            edges = list(zip(vm.iu[live].tolist(), vm.ju[live].tolist()))
+            return Relation.from_edges(edges, nodes=range(self.n_nodes))
         return Relation.from_edges(
             sorted(self.graphs[t_index]), nodes=range(self.n_nodes)
         )
@@ -197,7 +252,54 @@ class ContactPlan:
 
     # ------------------------------------------------------------- windows
     def windows(self) -> List[ContactWindow]:
-        """Merge per-step feasibility into maximal contact windows."""
+        """Merge per-step feasibility into maximal contact windows.
+
+        With a :class:`VisibilityMatrix` attached this is a run-length pass
+        over the ``(T, E)`` feasibility array (per-candidate-edge
+        ``flatnonzero``/``diff``); otherwise it falls back to the legacy
+        per-step dict scan. Both orders end in the same total sort key, and
+        the rate statistics are computed over the identical float sequence,
+        so the two paths are bit-identical (equivalence suite asserts it).
+        """
+        if self.matrix is None:
+            return self.windows_reference()
+        vm = self.matrix
+        if vm.n_candidates == 0 or vm.n_steps == 0:
+            return []
+        T = vm.n_steps
+        # one run-length pass over ALL edges at once: transpose to (E, T),
+        # append a False column so every run closes inside its own row, and
+        # read run starts/ends off the sign changes of the flattened array
+        vis = np.concatenate(
+            (vm.visible.T, np.zeros((vm.n_candidates, 1), dtype=bool)), axis=1
+        )
+        flat = vis.ravel().view(np.int8)
+        d = np.diff(flat, prepend=np.int8(0))
+        starts = np.flatnonzero(d == 1)
+        stops = np.flatnonzero(d == -1)        # exclusive
+        rates_t = np.ascontiguousarray(vm.rate_bps.T)  # (E, T) row slices
+        iu_l, ju_l = vm.iu.tolist(), vm.ju.tolist()
+        out: List[ContactWindow] = []
+        for s, p in zip(starts.tolist(), stops.tolist()):
+            e, t0 = divmod(s, T + 1)
+            t1 = t0 + (p - s) - 1
+            rates = rates_t[e, t0 : t1 + 1]
+            out.append(
+                ContactWindow(
+                    i=iu_l[e],
+                    j=ju_l[e],
+                    t_start_s=self.times[t0],
+                    t_end_s=self.times[t1] + self.step_s,
+                    min_rate_bps=float(rates.min()),
+                    mean_rate_bps=float(np.mean(rates)),
+                )
+            )
+        out.sort(key=lambda w: (w.t_start_s, w.i, w.j))
+        return out
+
+    def windows_reference(self) -> List[ContactWindow]:
+        """The legacy per-step dict-scan window extraction, retained as the
+        equivalence oracle for the run-length fast path."""
         open_: Dict[Edge, List] = {}   # edge -> [t_start_idx, rates]
         out: List[ContactWindow] = []
 
@@ -252,6 +354,12 @@ class ContactPlan:
         (see :mod:`repro.constellation.optimizer`); its output is validated
         against the antenna budget.
         """
+        if self._graphs_deferred:
+            # scheduling needs per-edge Link physics — materialize now
+            yield from self.with_graphs().iter_slots(
+                antennas, payload_bytes, alive, acquisition_s, colorer
+            )
+            return
         alive_s = set(alive) if alive is not None else None
         cursor = 0.0
         prev_edges: frozenset = frozenset()
@@ -339,7 +447,8 @@ class ContactPlan:
             from repro.constellation.optimizer import optimize_schedule
 
             return optimize_schedule(
-                self,
+                # materialize once — the race iterates the slots per strategy
+                self.with_graphs(),
                 antennas=antennas,
                 payload_bytes=payload_bytes,
                 alive=alive,
@@ -348,7 +457,7 @@ class ContactPlan:
                 max_slots=max_slots,
             ).schedule
         slots: List[Slot] = []
-        for slot in self.iter_slots(
+        for slot in self.with_graphs().iter_slots(
             antennas, payload_bytes, alive, acquisition_s, colorer
         ):
             slots.append(slot)
@@ -360,7 +469,7 @@ class ContactPlan:
 
 
 def build_contact_plan(
-    geom: WalkerDelta,
+    geom: Geometry,
     duration_s: float,
     step_s: float,
     budget: LinkBudget = LinkBudget(),
@@ -368,6 +477,7 @@ def build_contact_plan(
     candidates: Union[str, Sequence[Edge]] = "all",
     max_range_km: Optional[float] = None,
     min_rate_bps: float = 0.0,
+    with_graphs: bool = True,
 ) -> ContactPlan:
     """Propagate, evaluate links, and package the time-varying graph.
 
@@ -376,6 +486,13 @@ def build_contact_plan(
     explicit edge list. Ground stations (node ids after the satellites)
     participate only in ``"all"`` mode or when listed explicitly; their
     links use the budget's elevation mask instead of limb occlusion.
+
+    ``with_graphs=False`` skips materializing the per-step ``{edge: Link}``
+    dicts — at mega-constellation scale building the Link objects costs
+    more than the batched physics itself, and windows / relations / routing
+    all run straight off the :class:`VisibilityMatrix`. Anything that does
+    need the dicts (``schedule``) materializes them lazily via
+    :meth:`ContactPlan.with_graphs`.
     """
     times = orbits_lib.sample_times(duration_s, step_s)
     tracks = orbits_lib.propagate(geom, times, ground_stations)
@@ -389,14 +506,15 @@ def build_contact_plan(
     else:
         cand = list(candidates)
     ground_nodes = range(geom.total, tracks.shape[1])
-    graphs = links_lib.visibility_series(
+    vm = links_lib.visibility_matrix(
         tracks, budget, cand, max_range_km, min_rate_bps, ground_nodes
     )
     return ContactPlan(
         n_nodes=tracks.shape[1],
         times=tuple(float(t) for t in times),
-        graphs=tuple(graphs),
+        graphs=tuple(vm.graphs()) if with_graphs else (),
         step_s=float(step_s),
+        matrix=vm,
     )
 
 

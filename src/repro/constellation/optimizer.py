@@ -168,11 +168,15 @@ def optimize_schedule(
     sinks: Optional[Iterable[int]] = None,
     pipeline_depth: int = 1,
     max_staleness_windows: int = 0,
+    strategies: Optional[Sequence[str]] = None,
 ) -> OptimizationResult:
     """Pick the cheapest feasible schedule for ``plan`` under the cost oracle.
 
     ``mode`` is ``"rate"`` (race the whole strategy portfolio) or a single
-    strategy name from :data:`STRATEGIES` (raced against greedy). The greedy
+    strategy name from :data:`STRATEGIES` (raced against greedy).
+    ``strategies`` overrides ``mode`` with an explicit portfolio subset —
+    greedy is injected regardless (mega-constellation plans subset away
+    ``"mwm"``, whose O(V³) blossom dominates at 1000+ nodes). The greedy
     baseline is *always* a candidate and wins ties, so the returned
     schedule's ``schedule_cost`` is never above the baseline's — the
     invariant ``tests/test_schedule_optimizer.py`` proves on random plans.
@@ -200,8 +204,16 @@ def optimize_schedule(
         )
     if objective == "groundseg" and sinks is None:
         raise ValueError("objective='groundseg' needs the sink node ids")
-    if mode == "rate":
-        names: Tuple[str, ...] = STRATEGIES
+    if strategies is not None:
+        bad = sorted(set(strategies) - set(_COLORER_FACTORIES))
+        if bad:
+            raise ValueError(
+                f"unknown strategies {bad}; choose from {sorted(_COLORER_FACTORIES)}"
+            )
+        # greedy is always raced (the never-worse anchor); order preserved
+        names: Tuple[str, ...] = tuple(dict.fromkeys(("greedy", *strategies)))
+    elif mode == "rate":
+        names = STRATEGIES
     elif mode in _COLORER_FACTORIES:
         names = ("greedy", mode) if mode != "greedy" else ("greedy",)
     else:
@@ -209,6 +221,7 @@ def optimize_schedule(
             f"optimize mode must be 'rate' or one of {sorted(_COLORER_FACTORIES)}, "
             f"got {mode!r}"
         )
+    plan = plan.with_graphs()   # materialize Link dicts once, not per strategy
     candidates: Dict[str, ContactSchedule] = {}
     costs: Dict[str, cost_lib.RoundCost] = {}
     for name in names:
@@ -259,3 +272,88 @@ def optimize_schedule(
             slots=winner.slots[:max_slots],
         )
     return OptimizationResult(schedule=winner, strategy=best, costs=costs)
+
+
+class WindowedOptimizer:
+    """Incremental schedule optimization across consecutive plan windows.
+
+    Re-racing the full strategy portfolio every window repeats work that
+    consecutive windows almost always agree on (orbital geometry drifts
+    slowly relative to a plan window). This warm-starts each window from
+    the previous window's winning strategy:
+
+    - window 0 (and any window after a winner change) races the FULL
+      portfolio — recorded as ``optimizer.warm_start.race``;
+    - subsequent windows race only {greedy, previous winner}. If the
+      previous winner still wins, that cheap race is the answer —
+      ``optimizer.warm_start.hit``. If it lost its edge (the geometry
+      shifted), the full portfolio is re-raced immediately, so a stale
+      warm start costs one extra cheap race, never a worse schedule.
+
+    Greedy is a candidate in every race, so the per-window
+    never-worse-than-greedy guarantee of :func:`optimize_schedule` is
+    preserved verbatim. ``full_race_every=k`` (optional) forces a full
+    re-race every k windows, bounding how long a greedy-winning streak can
+    mask a newly profitable strategy.
+    """
+
+    def __init__(
+        self,
+        portfolio: Sequence[str] = STRATEGIES,
+        full_race_every: int = 0,
+        **optimize_kwargs,
+    ):
+        bad = sorted(set(portfolio) - set(_COLORER_FACTORIES))
+        if bad:
+            raise ValueError(
+                f"unknown strategies {bad}; choose from {sorted(_COLORER_FACTORIES)}"
+            )
+        if full_race_every < 0:
+            raise ValueError(f"full_race_every must be >= 0, got {full_race_every}")
+        if "strategies" in optimize_kwargs or "mode" in optimize_kwargs:
+            raise ValueError(
+                "pass the portfolio positionally; WindowedOptimizer owns the "
+                "per-window strategy selection"
+            )
+        self.portfolio = tuple(dict.fromkeys(("greedy", *portfolio)))
+        self.full_race_every = int(full_race_every)
+        self.optimize_kwargs = optimize_kwargs
+        self._prev_winner: Optional[str] = None
+        self._window = -1
+
+    @property
+    def window(self) -> int:
+        """Index of the last optimized window (-1 before the first)."""
+        return self._window
+
+    def optimize(
+        self, plan: ContactPlan, alive: Optional[Iterable[int]] = None
+    ) -> OptimizationResult:
+        """Optimize the next window's plan, warm-starting from the last."""
+        self._window += 1
+        rec = telemetry.get_recorder()
+        due_full = (
+            self._prev_winner is None
+            or (
+                self.full_race_every > 0
+                and self._window % self.full_race_every == 0
+            )
+        )
+        if not due_full:
+            warm = optimize_schedule(
+                plan,
+                alive=alive,
+                strategies=("greedy", self._prev_winner),
+                **self.optimize_kwargs,
+            )
+            if warm.strategy == self._prev_winner:
+                rec.counter("optimizer.warm_start.hit")
+                return warm
+            # previous winner dethroned — the window changed character;
+            # fall through to a full portfolio race
+        rec.counter("optimizer.warm_start.race")
+        result = optimize_schedule(
+            plan, alive=alive, strategies=self.portfolio, **self.optimize_kwargs
+        )
+        self._prev_winner = result.strategy
+        return result

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Sequence
+from typing import List, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -97,7 +97,50 @@ class WalkerDelta:
         """ECI positions at time(s) ``t`` (seconds).
 
         Scalar ``t`` -> (total, 3); array (T,) -> (T, total, 3). Km.
+
+        One batched (T, N, 3) array program — no per-plane/per-satellite
+        Python loops, so a 1000+ satellite shell propagates in one shot.
+        Bit-identical to :meth:`positions_reference` (the retained legacy
+        loop), which the mega-constellation equivalence suite asserts.
         """
+        ts = np.atleast_1d(np.asarray(t, dtype=np.float64))
+        r = self.orbit_radius_km
+        n = self.mean_motion_rad_s
+        inc = math.radians(self.inclination_deg)
+        ci, si = math.cos(inc), math.sin(inc)
+        node = np.arange(self.total)
+        plane = node // self.per_plane
+        slot = node % self.per_plane
+        # raan_rad / phase_rad, evaluated for every node at once with the
+        # same scalar operation order as the per-satellite originals
+        spread = 2.0 * math.pi if self.pattern == "delta" else math.pi
+        raan = spread * plane / self.planes                         # (N,)
+        phase = (
+            2.0 * math.pi * slot / self.per_plane
+            + 2.0 * math.pi * self.phasing * plane / self.total
+        )                                                           # (N,)
+        u = phase[None, :] + n * ts[:, None]                        # (T, N)
+        x = r * np.cos(u)
+        y = r * np.sin(u)
+        z = np.zeros_like(u)
+        # rot = Rz(raan) @ Rx(inc) in closed form; out = in_plane @ rot.T
+        # with the zero third component kept so the flop sequence (and
+        # therefore every rounding) matches the legacy matmul exactly
+        ca, sa = np.cos(raan), np.sin(raan)
+        out = np.empty((ts.shape[0], self.total, 3))
+        out[..., 0] = x * ca + y * (-sa * ci) + z * (sa * si)
+        out[..., 1] = x * sa + y * (ca * ci) + z * (-ca * si)
+        out[..., 2] = x * 0.0 + y * si + z * ci
+        return out if np.ndim(t) else out[0]
+
+    def positions_reference(self, t: float | np.ndarray) -> np.ndarray:
+        """The per-plane/per-satellite propagation loop, retained as the
+        equivalence oracle for :meth:`positions` (PR 3/PR 7 style: every
+        fast path keeps its legacy twin). The rotation is applied with
+        explicit component products rather than ``@`` so the flop sequence
+        is FMA-free on every platform — the batched path then reproduces it
+        bit for bit (BLAS contracts the tiny matmul with fused
+        multiply-adds, which rounds differently by ~1 ulp)."""
         ts = np.atleast_1d(np.asarray(t, dtype=np.float64))
         r = self.orbit_radius_km
         n = self.mean_motion_rad_s
@@ -107,11 +150,64 @@ class WalkerDelta:
             rot = _rot_z(self.raan_rad(p)) @ _rot_x(inc)
             for k in range(self.per_plane):
                 u = self.phase_rad(p, k) + n * ts  # (T,)
-                in_plane = np.stack(
-                    [r * np.cos(u), r * np.sin(u), np.zeros_like(u)], axis=-1
-                )
-                out[:, self.node_id(p, k)] = in_plane @ rot.T
+                x = r * np.cos(u)
+                y = r * np.sin(u)
+                z = np.zeros_like(u)
+                nid = self.node_id(p, k)
+                for axis in range(3):
+                    out[:, nid, axis] = (
+                        x * rot[axis, 0] + y * rot[axis, 1] + z * rot[axis, 2]
+                    )
         return out if np.ndim(t) else out[0]
+
+
+@dataclass(frozen=True)
+class MultiShell:
+    """A stack of Walker shells — the mega-constellation layout.
+
+    Starlink-class systems fly several shells at different altitudes and
+    inclinations; node ids run shell by shell in the given order (shell 0's
+    Walker layout first, then shell 1 offset by ``shells[0].total``, ...),
+    so one :class:`MultiShell` drops into every relation/schedule/routing
+    API that takes a flat node-id universe. ``positions`` is the batched
+    concatenation of the per-shell array programs.
+    """
+
+    shells: Tuple[WalkerDelta, ...]
+
+    def __post_init__(self):
+        if not self.shells:
+            raise ValueError("MultiShell needs at least one shell")
+
+    @property
+    def total(self) -> int:
+        return sum(s.total for s in self.shells)
+
+    def shell_offsets(self) -> Tuple[int, ...]:
+        """Node id of each shell's first satellite."""
+        offs: List[int] = []
+        acc = 0
+        for s in self.shells:
+            offs.append(acc)
+            acc += s.total
+        return tuple(offs)
+
+    def shell_of(self, node: int) -> int:
+        acc = 0
+        for idx, s in enumerate(self.shells):
+            acc += s.total
+            if node < acc:
+                return idx
+        raise ValueError(f"node {node} outside 0..{self.total - 1}")
+
+    def positions(self, t: float | np.ndarray) -> np.ndarray:
+        """ECI positions: scalar ``t`` -> (total, 3); (T,) -> (T, total, 3)."""
+        ts = np.atleast_1d(np.asarray(t, dtype=np.float64))
+        out = np.concatenate([s.positions(ts) for s in self.shells], axis=1)
+        return out if np.ndim(t) else out[0]
+
+
+Geometry = Union["WalkerDelta", "MultiShell"]
 
 
 @dataclass(frozen=True)
@@ -140,7 +236,7 @@ class GroundStation:
 
 
 def propagate(
-    geom: WalkerDelta,
+    geom: Geometry,
     times: Sequence[float] | np.ndarray,
     ground_stations: Sequence[GroundStation] = (),
 ) -> np.ndarray:

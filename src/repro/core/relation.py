@@ -37,6 +37,24 @@ class Relation:
     nodes: FrozenSet[int]
     pairs: FrozenSet[Pair]
 
+    # ------------------------------------------------------ adjacency cache
+    # Scheduling and routing interrogate a relation many times per slot
+    # (peers_of / degree / edge_list in inner loops); recomputing them by
+    # scanning ``pairs`` is O(E) per call and turns the contact-plan colorer
+    # and the routing DP into O(V·E) per step. The adjacency map is derived
+    # once per instance and memoized directly in ``__dict__`` (legal on a
+    # frozen dataclass — only ``__setattr__`` is blocked), keeping the
+    # public API and the value semantics unchanged.
+    def _adjacency(self) -> Dict[int, Tuple[int, ...]]:
+        cached = self.__dict__.get("_adj_cache")
+        if cached is None:
+            by_src: Dict[int, List[int]] = {}
+            for i, j in self.pairs:
+                by_src.setdefault(i, []).append(j)
+            cached = {v: tuple(sorted(ps)) for v, ps in by_src.items()}
+            self.__dict__["_adj_cache"] = cached
+        return cached
+
     # ---------------------------------------------------------------- build
     @staticmethod
     def from_pairs(pairs: Iterable[Pair], nodes: Iterable[int] | None = None) -> "Relation":
@@ -145,23 +163,50 @@ class Relation:
         return {frozenset(p) for p in self.pairs}
 
     def edge_list(self) -> List[Tuple[int, int]]:
-        return sorted((min(a, b), max(a, b)) for a, b in {tuple(sorted(e)) for e in self.edges()})
+        cached = self.__dict__.get("_edge_list_cache")
+        if cached is None:
+            cached = tuple(
+                sorted({(min(a, b), max(a, b)) for a, b in self.pairs})
+            )
+            self.__dict__["_edge_list_cache"] = cached
+        return list(cached)
 
     def participants(self) -> Set[int]:
         """Nodes that take part in this slot (paper: the set A, m ≤ n)."""
-        return {i for p in self.pairs for i in p}
+        return set(self._adjacency())
 
     def peers_of(self, node: int) -> List[int]:
         """The node's `peer_ids` argument to getMeas, in sorted order."""
-        return sorted(j for i, j in self.pairs if i == node)
+        return list(self._adjacency().get(node, ()))
 
     def degree(self, node: int) -> int:
         """Number of simultaneous links node needs = number of antennas used."""
-        return len(self.peers_of(node))
+        return len(self._adjacency().get(node, ()))
 
     def max_degree(self) -> int:
-        parts = self.participants()
-        return max((self.degree(v) for v in parts), default=0)
+        return max((len(ps) for ps in self._adjacency().values()), default=0)
+
+    def pairs_array(self) -> np.ndarray:
+        """The directed pairs as a sorted (P, 2) intp array — the form the
+        vectorized routing DP consumes. Memoized like the adjacency map
+        (ascending (src, dst) order, so scatter-min tie-breaks reproduce the
+        legacy ascending-neighbor iteration)."""
+        arr = self.__dict__.get("_pairs_array_cache")
+        if arr is None:
+            if self.pairs:
+                # chain.from_iterable keeps the flattening in C — a Python
+                # genexpr here dominated the whole routing DP at mega scale
+                flat = np.fromiter(
+                    itertools.chain.from_iterable(self.pairs),
+                    dtype=np.intp,
+                    count=2 * len(self.pairs),
+                )
+                arr = flat.reshape(-1, 2)
+                arr = arr[np.lexsort((arr[:, 1], arr[:, 0]))]
+            else:
+                arr = np.empty((0, 2), dtype=np.intp)
+            self.__dict__["_pairs_array_cache"] = arr
+        return arr
 
     def adjacency(self, n: int | None = None) -> np.ndarray:
         """Boolean adjacency matrix over node IDs 0..n-1."""

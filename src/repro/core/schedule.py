@@ -153,7 +153,13 @@ def edge_coloring(rel: Relation) -> List[Relation]:
     one fewer matching = one fewer ppermute on the collective path.
     """
     parts = sorted(rel.participants())
-    if len(parts) % 2 == 0 and len(parts) >= 2:
+    # O(E) pair-count guard before the O(V^2) clique materialization — at
+    # mega-constellation sizes the set build would dominate the coloring.
+    if (
+        len(parts) % 2 == 0
+        and len(parts) >= 2
+        and len(rel.pairs) == len(parts) * (len(parts) - 1)
+    ):
         want = {(i, j) for i in parts for j in parts if i != j}
         if rel.pairs == frozenset(want):  # exact clique on participants
             return list(round_robin_tournament(len(parts), nodes=parts))

@@ -51,7 +51,10 @@ import math
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.relation import Relation
+from repro.telemetry import recorder as telemetry
 
 DirectedEdge = Tuple[int, int]
 
@@ -104,23 +107,17 @@ class RoutingTable:
         return max(slots) if slots else None
 
 
-def _neighbors(rel: Relation, v: int) -> List[int]:
-    return rel.peers_of(v)
+def _neighbors_reference(rel: Relation, v: int) -> List[int]:
+    """The pre-adjacency-cache neighbor query — an O(pairs) scan per call,
+    exactly as ``Relation.peers_of`` worked before the memoized adjacency
+    map. The reference DP keeps it so the retained oracle measures (and
+    reproduces) the code the vectorized relaxation actually replaced."""
+    return sorted(j for i, j in rel.pairs if i == v)
 
 
-def earliest_delivery_routes(
-    slots: Sequence[Relation],
-    n_nodes: int,
-    sinks: Iterable[int],
-    sources: Optional[Iterable[int]] = None,
-) -> RoutingTable:
-    """Earliest-delivery contact-graph routes from each source to any sink.
-
-    ``slots`` is the materialized TDM slot sequence (e.g.
-    ``ContactSchedule.tdm.slots`` or ``ContactPlan.relations()``);
-    ``sources`` defaults to every non-sink node id. A source that IS a sink
-    is trivially delivered (empty hop list, ``delivery_slot=-1``).
-    """
+def _check_sinks_sources(
+    n_nodes: int, sinks: Iterable[int], sources: Optional[Iterable[int]]
+) -> Tuple[FrozenSet[int], List[int]]:
     sink_s = frozenset(int(s) for s in sinks)
     if not sink_s:
         raise ValueError("need at least one sink node")
@@ -131,37 +128,24 @@ def earliest_delivery_routes(
         src_list = [v for v in range(n_nodes) if v not in sink_s]
     else:
         src_list = sorted(set(int(s) for s in sources))
-    T = len(slots)
+    return sink_s, src_list
 
-    # backward DP: f_next = f[.][t+1]; policy filled for t = T-1 .. 0
-    f_next = [math.inf] * n_nodes
-    policy: List[Tuple[Optional[int], ...]] = []
-    for t in range(T - 1, -1, -1):
-        rel = slots[t]
-        f_cur = list(f_next)
-        row: List[Optional[int]] = [None] * n_nodes
-        for v in range(n_nodes):
-            if v in sink_s:
-                continue
-            best = f_next[v]           # hold (preferred on ties)
-            act: Optional[int] = None
-            for u in _neighbors(rel, v):
-                val = t if u in sink_s else f_next[u]
-                if val < best:
-                    best, act = val, u
-            f_cur[v] = best
-            row[v] = act
-        f_next = f_cur
-        policy.append(tuple(row))
-    policy.reverse()
-    f0 = f_next  # f[.][0]
 
+def _routes_from_policy(
+    policy: Sequence[Tuple[Optional[int], ...]],
+    f0: Sequence[float],
+    src_list: Sequence[int],
+    sink_s: FrozenSet[int],
+) -> Dict[int, Route]:
+    """Walk the DP policy from each source — shared by the vectorized and
+    reference DPs (the policy rows fully determine the routes)."""
+    T = len(policy)
     routes: Dict[int, Route] = {}
     for s in src_list:
         if s in sink_s:
             routes[s] = Route(source=s, sink=s, delivery_slot=-1, hops=())
             continue
-        if not math.isfinite(f0[s]):
+        if not math.isfinite(float(f0[s])):
             routes[s] = Route(source=s, sink=None, delivery_slot=None, hops=())
             continue
         hops: List[Hop] = []
@@ -177,6 +161,138 @@ def earliest_delivery_routes(
         routes[s] = Route(
             source=s, sink=v, delivery_slot=hops[-1].slot, hops=tuple(hops)
         )
+    return routes
+
+
+def _dp_policy(
+    slots: Sequence[Relation], n_nodes: int, sink_s: FrozenSet[int]
+) -> Tuple[Tuple[Tuple[Optional[int], ...], ...], np.ndarray]:
+    """The batched backward relaxation: (policy, f[.][0]).
+
+    One segmented-min pass per slot over the slot's sorted directed pairs
+    instead of nested Python loops — O(T·(V+E)) NumPy work. The
+    hold-on-ties / lowest-next-hop determinism rule is reproduced exactly:
+    a node forwards only on a STRICT improvement over holding, and among
+    neighbors achieving the minimum the lowest id wins.
+    """
+    T = len(slots)
+    is_sink = np.zeros(n_nodes, dtype=bool)
+    is_sink[list(sink_s)] = True
+    f_next = np.full(n_nodes, np.inf)
+    policy: List[Tuple[Optional[int], ...]] = []
+    hold_row = (None,) * n_nodes
+    for t in range(T - 1, -1, -1):
+        pairs = slots[t].pairs_array()
+        if pairs.size == 0:
+            policy.append(hold_row)
+            continue
+        srcs, dsts = pairs[:, 0], pairs[:, 1]
+        keep = ~is_sink[srcs]            # sinks never forward
+        if not keep.all():
+            srcs, dsts = srcs[keep], dsts[keep]
+        if srcs.size == 0:
+            policy.append(hold_row)
+            continue
+        # value of forwarding to each neighbor: deliver now (t) at a sink,
+        # else the neighbor's own earliest delivery from the next slot on
+        val = np.where(is_sink[dsts], float(t), f_next[dsts])
+        # pairs_array is (src, dst)-sorted, so each source is one contiguous
+        # group: segmented min via reduceat (exact — min is order-free)
+        # instead of the much slower buffered ufunc.at scatter
+        gs = np.flatnonzero(np.concatenate(([True], srcs[1:] != srcs[:-1])))
+        gmin = np.minimum.reduceat(val, gs)
+        gsrc = srcs[gs]
+        imp = gmin < f_next[gsrc]        # strict: hold preferred on ties
+        if not imp.any():
+            policy.append(hold_row)
+            continue
+        # among neighbors achieving the min the lowest dst wins; dsts are
+        # ascending within each group, so that is the FIRST index hitting
+        # the group minimum
+        P = val.size
+        counts = np.diff(np.concatenate((gs, [P])))
+        at_min = val == np.repeat(gmin, counts)
+        first = np.minimum.reduceat(np.where(at_min, np.arange(P), P), gs)
+        g_imp = np.flatnonzero(imp)
+        move = gsrc[g_imp]
+        f_next[move] = gmin[g_imp]
+        row = list(hold_row)
+        for v, a in zip(move.tolist(), dsts[first[g_imp]].tolist()):
+            row[v] = a
+        policy.append(tuple(row))
+    policy.reverse()
+    return tuple(policy), f_next
+
+
+def earliest_delivery_routes(
+    slots: Sequence[Relation],
+    n_nodes: int,
+    sinks: Iterable[int],
+    sources: Optional[Iterable[int]] = None,
+) -> RoutingTable:
+    """Earliest-delivery contact-graph routes from each source to any sink.
+
+    ``slots`` is the materialized TDM slot sequence (e.g.
+    ``ContactSchedule.tdm.slots`` or ``ContactPlan.relations()``);
+    ``sources`` defaults to every non-sink node id. A source that IS a sink
+    is trivially delivered (empty hop list, ``delivery_slot=-1``).
+
+    The DP runs as a batched array relaxation (:func:`_dp_policy`) —
+    bit-identical to :func:`earliest_delivery_routes_reference`, the
+    retained legacy nested-loop oracle.
+    """
+    sink_s, src_list = _check_sinks_sources(n_nodes, sinks, sources)
+    policy, f0 = _dp_policy(slots, n_nodes, sink_s)
+    routes = _routes_from_policy(policy, f0, src_list, sink_s)
+    return RoutingTable(
+        n_nodes=n_nodes,
+        n_slots=len(slots),
+        sinks=sink_s,
+        routes=routes,
+        policy=policy,
+    )
+
+
+def earliest_delivery_routes_reference(
+    slots: Sequence[Relation],
+    n_nodes: int,
+    sinks: Iterable[int],
+    sources: Optional[Iterable[int]] = None,
+) -> RoutingTable:
+    """The legacy per-slot/per-node/per-neighbor Python DP, retained as the
+    equivalence oracle for :func:`earliest_delivery_routes`.
+
+    Faithful to the pre-vectorization implementation including its
+    per-call neighbor scan (:func:`_neighbors_reference`) — which is why it
+    goes quadratic at mega-constellation scale. Run it on small instances
+    (the property suite) or bounded slot prefixes (the benchmark's timed
+    twin), not on 1000-satellite horizons."""
+    sink_s, src_list = _check_sinks_sources(n_nodes, sinks, sources)
+    T = len(slots)
+
+    # backward DP: f_next = f[.][t+1]; policy filled for t = T-1 .. 0
+    f_next = [math.inf] * n_nodes
+    policy: List[Tuple[Optional[int], ...]] = []
+    for t in range(T - 1, -1, -1):
+        rel = slots[t]
+        f_cur = list(f_next)
+        row: List[Optional[int]] = [None] * n_nodes
+        for v in range(n_nodes):
+            if v in sink_s:
+                continue
+            best = f_next[v]           # hold (preferred on ties)
+            act: Optional[int] = None
+            for u in _neighbors_reference(rel, v):
+                val = t if u in sink_s else f_next[u]
+                if val < best:
+                    best, act = val, u
+            f_cur[v] = best
+            row[v] = act
+        f_next = f_cur
+        policy.append(tuple(row))
+    policy.reverse()
+
+    routes = _routes_from_policy(policy, f_next, src_list, sink_s)
     return RoutingTable(
         n_nodes=n_nodes,
         n_slots=T,
@@ -351,7 +467,7 @@ def build_broadcast_program(
         for v in sorted(rel.participants()):
             if v in have:
                 continue
-            parents = [u for u in _neighbors(rel, v) if u in have]
+            parents = [u for u in rel.peers_of(v) if u in have]
             if parents:
                 new[v] = min(parents)
         for v, p in new.items():
@@ -489,7 +605,17 @@ class MultiWindowRouter:
       satellite the downlink misses simply keeps its local params and
       catches the next flood — the skip-slot semantics already tolerate
       that), the broadcast floods over what remains.
+
+    The DP policy depends only on ``(alive, slots)`` — not on which
+    payloads are queued — so repeated windows over the same plan with the
+    same alive set (the common steady-state case) reuse a cached policy
+    instead of re-running the DP; per-source routes are rebuilt from it in
+    O(sources·hops). Hits/misses land on the flight recorder as
+    ``groundseg.router.table_cache.{hit,miss}``; the cache is a small
+    bounded LRU (a long-running router must not grow without bound).
     """
+
+    TABLE_CACHE_MAX = 8
 
     def __init__(
         self,
@@ -527,6 +653,12 @@ class MultiWindowRouter:
         self.dropped_log_max = int(dropped_log_max)
         self.dropped_log: List[DroppedPayload] = []
         self.dropped_total: int = 0
+        # (alive, slots) -> (restricted rels, DP policy, f[.][0]); ordered
+        # for LRU eviction at TABLE_CACHE_MAX entries
+        self._table_cache: Dict[
+            Tuple[FrozenSet[int], Tuple[Relation, ...]],
+            Tuple[List[Relation], Tuple[Tuple[Optional[int], ...], ...], np.ndarray],
+        ] = {}
 
     def reset_dropped_log(self) -> List[DroppedPayload]:
         """Drain the retained drop records (``dropped_total`` keeps the
@@ -562,7 +694,21 @@ class MultiWindowRouter:
             else set(range(self.n_nodes))
         )
         live |= self.sinks
-        rels = [r.restrict(live) for r in slots]
+        rec = telemetry.get_recorder()
+        cache_key = (frozenset(live), tuple(slots))
+        cached = self._table_cache.get(cache_key)
+        if cached is not None:
+            rec.counter("groundseg.router.table_cache.hit")
+            rels, dp_policy, dp_f0 = cached
+            # refresh LRU position
+            self._table_cache[cache_key] = self._table_cache.pop(cache_key)
+        else:
+            rec.counter("groundseg.router.table_cache.miss")
+            rels = [r.restrict(live) for r in slots]
+            dp_policy, dp_f0 = _dp_policy(rels, self.n_nodes, self.sinks)
+            self._table_cache[cache_key] = (rels, dp_policy, dp_f0)
+            while len(self._table_cache) > self.TABLE_CACHE_MAX:
+                self._table_cache.pop(next(iter(self._table_cache)))
 
         dropped: Dict[int, int] = {}
         if self._window > 0:
@@ -588,8 +734,14 @@ class MultiWindowRouter:
         ages = dict(self._pending)
         ages.update({v: 0 for v in injected})
 
-        table = earliest_delivery_routes(
-            rels, self.n_nodes, self.sinks, sources=sorted(ages)
+        table = RoutingTable(
+            n_nodes=self.n_nodes,
+            n_slots=len(rels),
+            sinks=self.sinks,
+            routes=_routes_from_policy(
+                dp_policy, dp_f0, sorted(ages), self.sinks
+            ),
+            policy=dp_policy,
         )
         uplink = build_relay_program(
             rels,
