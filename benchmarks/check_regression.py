@@ -29,6 +29,11 @@ worse), with zero-baseline -> nonzero and missing counters failing
 outright. Filter which counters gate the job with ``--telemetry-prefix``
 (default trends them all); disable with ``--no-telemetry``.
 
+The gate never passes vacuously: a zero-row run or baseline, an explicitly
+requested metric matching no baseline row, or zero compared metric cells
+overall each fail the job — a trender that compares nothing must not be
+green.
+
 To (re)generate a baseline, run the benchmark with the same flags CI uses
 and commit its ``--out`` file under ``benchmarks/baselines/``.
 """
@@ -313,9 +318,33 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
     metrics = tuple(m.strip() for m in args.metrics.split(",") if m.strip())
 
-    failures, improvements, checked, table = compare(
-        load_rows(args.baseline), load_rows(args.run), metrics, args.threshold
+    base_rows = load_rows(args.baseline)
+    run_rows = load_rows(args.run)
+    # Guard against the silent-pass failure modes: an empty row list on
+    # either side means the bench crashed mid-run (or wrote a stub), and a
+    # gate that compares nothing would exit 0 right past it.
+    failures: List[str] = []
+    if not base_rows:
+        failures.append(
+            f"[guard] baseline {args.baseline} contains zero BENCH rows"
+        )
+    if not run_rows:
+        failures.append(f"[guard] run {args.run} contains zero BENCH rows")
+    explicit_metrics = args.metrics != ",".join(DEFAULT_METRICS)
+    if base_rows and explicit_metrics:
+        # explicitly requested metrics must exist somewhere in the baseline
+        # — a typo'd --metrics list must not pass by matching nothing (the
+        # default list is a cross-bench union, so it is exempt)
+        for m in metrics:
+            if not any(m in row for row in base_rows):
+                failures.append(
+                    f"[guard] requested metric {m!r} matches no baseline row"
+                )
+
+    cmp_failures, improvements, checked, table = compare(
+        base_rows, run_rows, metrics, args.threshold
     )
+    failures += cmp_failures
     if not args.no_telemetry:
         base_tel = load_telemetry(args.baseline)
         run_tel = load_telemetry(args.run)
@@ -326,6 +355,13 @@ def main(argv=None) -> int:
             failures += tel_failures
             table += tel_table
             checked += sum(1 for r in tel_table if r[6] != "new")
+    if checked == 0 and not failures:
+        # nothing compared and nothing else flagged it: every baseline row
+        # lacked the requested metrics — loud failure, not a green gate
+        failures.append(
+            "[guard] zero metric cells compared (no baseline row carries "
+            f"any of: {', '.join(metrics)})"
+        )
     if table:
         print(format_table(table))
         print()

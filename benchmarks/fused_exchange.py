@@ -150,11 +150,29 @@ def main(argv=None):
     p.add_argument("--out", default=None, help="write BENCH rows as json")
     p.add_argument("--trace", default=None,
                    help="write a Chrome trace (Perfetto) of this run")
+    p.add_argument("--report", default=None, metavar="PREFIX",
+                   help="write PREFIX.md/.json mission report of this run")
     args = p.parse_args(argv)
     with telemetry.trace_scope(args.trace):
         rows = _main(args)
         print("TELEMETRY " + json.dumps(telemetry.counters_snapshot()),
               flush=True)
+        if args.report:
+            from repro.telemetry.report import write_report
+
+            md, js = write_report(
+                args.report,
+                title="fused exchange bench",
+                extra={
+                    "bench": "fused_exchange",
+                    "n_rows": len(rows),
+                    "args": {
+                        "smoke": args.smoke, "full": args.full,
+                        "reps": args.reps,
+                    },
+                },
+            )
+            print(f"wrote mission report to {md} and {js}")
     return rows
 
 

@@ -50,6 +50,7 @@ from repro import telemetry
 from repro.constellation import contact_plan, cost, orbits
 from repro.groundseg import aggregation, routing
 from repro.launch.hlo_stats import collective_stats
+from repro.telemetry import audit
 
 GROUND_SITES = [
     orbits.GroundStation(0.0, 0.0, name="equator"),
@@ -149,6 +150,11 @@ def delay_tolerance_rows(payload, antennas, altitude, steps, staleness):
     # its contacts exist — the payload must persist
     wp0 = router.plan_window([r.restrict(others) for r in rels])
     wp1 = router.plan_window(rels)          # contacts back: stale delivery
+    # route-provenance audit over the scenario's per-window slot relations
+    verdict = audit.audit_window_programs(
+        [wp0, wp1], decay=0.5,
+        slots=[[r.restrict(others) for r in rels], rels],
+    )
     rows = [dict(
         bench="groundseg_delay_tolerance",
         planes=2, per_plane=3, steps=steps, staleness=staleness,
@@ -158,8 +164,9 @@ def delay_tolerance_rows(payload, antennas, altitude, steps, staleness):
         steady_delivered=float(wp1.uplink.delivered_count()),
         stale_age=float(wp1.delivered_ages.get(occluded, -1)),
         dropped=float(len(wp1.dropped)),
+        audit_violations=float(len(verdict.violations)),
     )]
-    return rows
+    return rows, verdict
 
 
 # ---------------------------------------------------------------------------
@@ -269,11 +276,35 @@ def main(argv=None):
     p.add_argument("--out", default=None, help="write BENCH rows as json")
     p.add_argument("--trace", default=None,
                    help="write a Chrome trace (Perfetto) of this run")
+    p.add_argument("--report", default=None, metavar="PREFIX",
+                   help="write PREFIX.md/.json mission report of this run")
     args = p.parse_args(argv)
     with telemetry.trace_scope(args.trace):
-        rows = _main(args)
+        rows, verdict = _main(args)
         print("TELEMETRY " + json.dumps(telemetry.counters_snapshot()),
               flush=True)
+        if args.report:
+            from repro.telemetry.report import write_report
+
+            md, js = write_report(
+                args.report,
+                audit=verdict,
+                title="groundseg pipeline bench",
+                extra={
+                    "bench": "groundseg_pipeline",
+                    "n_rows": len(rows),
+                    "args": {
+                        "smoke": args.smoke, "full": args.full,
+                        "reps": args.reps, "antennas": args.antennas,
+                    },
+                },
+            )
+            print(f"wrote mission report to {md} and {js}")
+        if not verdict.ok:
+            raise SystemExit(
+                f"route-provenance audit failed: "
+                f"{len(verdict.violations)} violation(s)"
+            )
     return rows
 
 
@@ -309,11 +340,17 @@ def _main(args):
     for r in rows:
         print("BENCH " + json.dumps(r), flush=True)
 
-    rows += delay_tolerance_rows(
+    dt_rows, verdict = delay_tolerance_rows(
         payload, args.antennas, args.altitude, steps_list[0],
         max(stales) or 2,
     )
+    rows += dt_rows
     print("BENCH " + json.dumps(rows[-1]), flush=True)
+    print(
+        f"route-provenance audit: {verdict.n_windows} windows, "
+        f"{verdict.n_payloads} payloads, {verdict.n_hops} hops, "
+        f"{len(verdict.violations)} violation(s)"
+    )
 
     rows += measured_rows(leaves, elems, args.antennas, steps_list[0],
                           args.altitude, reps)
@@ -335,7 +372,7 @@ def _main(args):
         out_path.parent.mkdir(parents=True, exist_ok=True)
         out_path.write_text(json.dumps(rows, indent=1))
         print(f"wrote {len(rows)} rows to {out_path}")
-    return rows
+    return rows, verdict
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ from repro.constellation.links import Edge, Link, LinkBudget, VisibilityMatrix
 from repro.constellation.orbits import Geometry, GroundStation, MultiShell, WalkerDelta
 from repro.core.relation import Relation
 from repro.core.schedule import TDMSchedule, antenna_constrained
+from repro.telemetry import metrics
+from repro.telemetry import recorder as telemetry
 
 AntennaSpec = Union[int, Dict[int, int], None]
 
@@ -188,6 +190,53 @@ class ContactSchedule:
             parts = {v for s in slots for v in s.relation.participants()}
             out.tdm.validate_antennas(_antenna_map(antennas, parts))
         return out
+
+
+def link_accounting(
+    sched: ContactSchedule, payload_bytes: int
+) -> Dict[str, object]:
+    """Per-link bytes / busy-time / utilization-vs-capacity over a
+    materialized schedule — the link-layer summary mission reports embed.
+
+    For every edge: how many slots it rode, the payload bytes scheduled
+    over it, the time it actually spent transferring, and its utilization
+    against capacity (scheduled bytes / bytes the link could have carried
+    at ``rate_bps`` during the slots it was active in). Utilization well
+    below 1.0 marks links the slot sizing leaves idle (slots last as long
+    as their slowest member); the schedule-level ``occupancy`` compares
+    link-busy time to the full wall-clock span, gaps included. Keys are
+    ``"i-j"`` strings so the dict drops straight into a JSON report.
+    """
+    per: Dict[Edge, Dict[str, float]] = {}
+    for slot in sched.slots:
+        for e, link in (slot.links or {}).items():
+            d = per.setdefault(
+                e,
+                {"slots": 0, "bytes": 0.0, "busy_s": 0.0, "capacity_bytes": 0.0},
+            )
+            d["slots"] += 1
+            d["bytes"] += float(payload_bytes)
+            d["busy_s"] += min(
+                link.transfer_time_s(payload_bytes), slot.duration_s
+            )
+            d["capacity_bytes"] += link.rate_bps * slot.duration_s / 8.0
+    for d in per.values():
+        d["utilization"] = (
+            d["bytes"] / d["capacity_bytes"] if d["capacity_bytes"] > 0 else 0.0
+        )
+    total_bytes = sum(d["bytes"] for d in per.values())
+    utils = [d["utilization"] for d in per.values()]
+    return {
+        "n_slots": len(sched),
+        "n_links": len(per),
+        "total_bytes": total_bytes,
+        "busy_s": sched.busy_s,
+        "span_s": sched.span_s,
+        "occupancy": sched.busy_s / sched.span_s if sched.span_s > 0 else 0.0,
+        "mean_utilization": sum(utils) / len(utils) if utils else 0.0,
+        "min_utilization": min(utils) if utils else 0.0,
+        "links": {f"{i}-{j}": d for (i, j), d in sorted(per.items())},
+    }
 
 
 @dataclass(frozen=True)
@@ -405,6 +454,37 @@ class ContactPlan:
                     )
                     for e, l in links.items()
                 )
+                # link-layer accounting (default-on, host-side only): slot
+                # occupancy plus each edge's busy fraction of the slot it
+                # rides — the slot lasts as long as its slowest transfer,
+                # so fast links idle for the rest. Counts cover every
+                # schedule this plan materializes (the optimizer race
+                # streams candidate schedules through here too).
+                rec = telemetry.get_recorder()
+                rec.counter("contact.slots_emitted")
+                rec.counter(
+                    "contact.scheduled_bytes", float(payload_bytes) * len(links)
+                )
+                metrics.observe(
+                    "contact.slot_duration_s",
+                    duration,
+                    buckets=metrics.LOG_BUCKETS,
+                    rec=rec,
+                )
+                metrics.observe(
+                    "contact.slot_links",
+                    len(links),
+                    buckets=metrics.COUNT_BUCKETS,
+                    rec=rec,
+                )
+                for l in links.values():
+                    busy = l.transfer_time_s(payload_bytes)
+                    metrics.observe(
+                        "contact.link_utilization",
+                        min(busy / duration, 1.0) if duration > 0 else 1.0,
+                        buckets=metrics.UNIT_BUCKETS,
+                        rec=rec,
+                    )
                 yield Slot(
                     relation=sub,
                     t_index=t,

@@ -33,6 +33,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro import telemetry
 from repro.constellation import cost as cost_lib
+from repro.telemetry import metrics
 from repro.constellation.contact_plan import (
     AntennaSpec,
     Colorer,
@@ -348,12 +349,24 @@ class WindowedOptimizer:
             )
             if warm.strategy == self._prev_winner:
                 rec.counter("optimizer.warm_start.hit")
+                self._update_hit_rate(rec)
                 return warm
             # previous winner dethroned — the window changed character;
             # fall through to a full portfolio race
         rec.counter("optimizer.warm_start.race")
+        self._update_hit_rate(rec)
         result = optimize_schedule(
             plan, alive=alive, strategies=self.portfolio, **self.optimize_kwargs
         )
         self._prev_winner = result.strategy
         return result
+
+    @staticmethod
+    def _update_hit_rate(rec) -> None:
+        """Keep the warm-start hit-rate gauge current (hits over all
+        windows optimized so far in this recording scope)."""
+        hits = rec.get_counter("optimizer.warm_start.hit")
+        races = rec.get_counter("optimizer.warm_start.race")
+        metrics.ratio_gauge(
+            "optimizer.warm_start.hit_rate", hits, hits + races, rec=rec
+        )

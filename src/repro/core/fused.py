@@ -57,6 +57,7 @@ import numpy as np
 
 from repro.core import tdm
 from repro.core.relation import Relation
+from repro.telemetry import metrics
 from repro.telemetry import recorder as telemetry
 from repro.kernels.tdm_compress import ref as q_ref
 from repro.kernels.tdm_compress import tdm_compress as q_kernel
@@ -375,6 +376,55 @@ def choco_fused_round(
     return new_x.astype(buf.dtype), tdm.ChocoState(x_hat=new_x_hat, s=s)
 
 
+def mix_wire_bytes(
+    n_elems: int,
+    itemsize: int,
+    compression: str,
+    *,
+    k: int = 0,
+    block: int = DEFAULT_BLOCK,
+) -> int:
+    """Static wire bytes ONE device ships per matching for one buffer.
+
+    ``none`` ships the raw buffer; ``int8`` ships the quantized buffer plus
+    one f32 scale per block (they travel as separate permutes but are one
+    matching's payload); ``topk`` ships ``k`` packed (value, block-local
+    index) pairs per block — the PR 7 single-payload layout. Per-round
+    totals multiply by the relation's matching count; the accounting
+    counters in :func:`fused_buffer_mix` do exactly that."""
+    nb = -(-int(n_elems) // int(block))
+    if compression == "topk":
+        return nb * int(k) * 8
+    if compression == "int8":
+        return int(n_elems) + nb * 4
+    return int(n_elems) * int(itemsize)
+
+
+def _account_exchange(
+    rel: Relation, n_elems: int, itemsize: int, compression: str, k: int, block: int
+) -> None:
+    """Trace-time exchange-size accounting (ISSUE 9 link-layer metrics).
+
+    Runs on the host while the mix is being traced — one bump per
+    (topology, layout) COMPILE, not per executed round (per-round rates
+    come from multiplying the static per-round counters the drivers keep).
+    Zero device ops, so compiled programs and outputs stay bit-identical.
+    """
+    m = len(tdm.edge_coloring(rel))
+    wire = m * mix_wire_bytes(
+        n_elems, itemsize, compression, k=k, block=block
+    )
+    rec = telemetry.get_recorder()
+    rec.counter("fused.exchange.mixes_traced")
+    rec.counter("fused.exchange.wire_bytes_per_round", wire)
+    metrics.observe(
+        "fused.exchange.wire_mbytes",
+        wire / 1e6,
+        buckets=metrics.LOG_BUCKETS,
+        rec=rec,
+    )
+
+
 def fused_buffer_mix(
     buf: jax.Array,
     rel: Relation,
@@ -395,6 +445,16 @@ def fused_buffer_mix(
     """
     if len(rel) == 0:
         return buf, residual
+    _account_exchange(
+        rel,
+        buf.shape[0],
+        jnp.dtype(buf.dtype).itemsize,
+        cfg.compression,
+        min(getattr(cfg, "topk_k", 0) * max(n_leaves, 1), buf.shape[0])
+        if cfg.compression == "topk"
+        else 0,
+        block,
+    )
     if cfg.compression == "topk":
         k = min(cfg.topk_k * max(n_leaves, 1), buf.shape[0])
         state = (

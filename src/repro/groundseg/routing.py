@@ -54,6 +54,7 @@ from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.relation import Relation
+from repro.telemetry import metrics
 from repro.telemetry import recorder as telemetry
 
 DirectedEdge = Tuple[int, int]
@@ -709,6 +710,13 @@ class MultiWindowRouter:
             self._table_cache[cache_key] = (rels, dp_policy, dp_f0)
             while len(self._table_cache) > self.TABLE_CACHE_MAX:
                 self._table_cache.pop(next(iter(self._table_cache)))
+        metrics.ratio_gauge(
+            "groundseg.router.table_cache.hit_rate",
+            rec.get_counter("groundseg.router.table_cache.hit"),
+            rec.get_counter("groundseg.router.table_cache.hit")
+            + rec.get_counter("groundseg.router.table_cache.miss"),
+            rec=rec,
+        )
 
         dropped: Dict[int, int] = {}
         if self._window > 0:
@@ -771,6 +779,28 @@ class MultiWindowRouter:
         delivered_ages = {s: ages[s] for s in sorted(delivered_ids)}
         residual = {s: ages[s] for s in sorted(ages) if s not in delivered_ids}
         self._pending = dict(residual)
+        # mission-control distributions (default-on host dict/bisect work):
+        # how deep the routing queue runs per window and how stale payloads
+        # are when they land / when they carry over.
+        metrics.observe(
+            "groundseg.router.queue_depth",
+            len(ages),
+            buckets=metrics.COUNT_BUCKETS,
+            rec=rec,
+        )
+        metrics.observe(
+            "groundseg.router.carried_depth",
+            len(residual),
+            buckets=metrics.COUNT_BUCKETS,
+            rec=rec,
+        )
+        for age in delivered_ages.values():
+            metrics.observe(
+                "groundseg.router.payload_age",
+                age,
+                buckets=metrics.AGE_BUCKETS,
+                rec=rec,
+            )
         return WindowProgram(
             window=self._window,
             uplink=uplink,

@@ -1,5 +1,7 @@
-"""Flight-recorder telemetry: spans/counters/events, Chrome-trace export,
-and oracle reconciliation of compiled rounds (see ISSUE 6).
+"""Flight-recorder telemetry: spans/counters/gauges/histograms/events,
+Chrome-trace + Prometheus export, oracle reconciliation of compiled rounds
+(ISSUE 6), and the mission-control layer (ISSUE 9): route-provenance
+audits and self-describing run reports.
 
 Quick use::
 
@@ -9,19 +11,47 @@ Quick use::
         ... run FL rounds ...
         telemetry.write_trace("trace.json", rec)        # -> Perfetto
         print(telemetry.metrics_snapshot(rec)["counters"])
+        telemetry.write_report("mission", rec)          # -> .md + .json
 
-Counters are default-on (host-side dict bumps, zero device syncs); spans,
-events, and per-round ``block_until_ready`` wall-clock timing exist only
-under ``tracing=True``; ``reconcile=True`` verifies every newly compiled
-round/window against the static collective oracles.
+Counters, gauges, and histograms are default-on (host-side dict/bisect
+work, zero device syncs); spans, events, and per-round
+``block_until_ready`` wall-clock timing exist only under ``tracing=True``;
+``reconcile=True`` verifies every newly compiled round/window against the
+static collective oracles. :func:`audit_window_programs` replays a planned
+window sequence hop by hop and returns a structured verdict.
 """
 
+from repro.telemetry.audit import (
+    AuditError,
+    AuditReport,
+    AuditViolation,
+    PayloadTrail,
+    audit_recorder,
+    audit_window_programs,
+    expected_sink_weights,
+)
 from repro.telemetry.export import (
     chrome_trace,
     metrics_snapshot,
+    prometheus_text,
     trace_scope,
     write_metrics,
+    write_prometheus,
     write_trace,
+)
+from repro.telemetry.metrics import (
+    Histogram,
+    get_gauge,
+    get_histogram,
+    histograms_summary,
+    observe,
+    ratio_gauge,
+    set_gauge,
+)
+from repro.telemetry.report import (
+    mission_report,
+    render_markdown,
+    write_report,
 )
 from repro.telemetry.reconcile import (
     ReconcileReport,
@@ -46,11 +76,18 @@ from repro.telemetry.recorder import (
 )
 
 __all__ = [
+    "AuditError",
+    "AuditReport",
+    "AuditViolation",
     "Event",
+    "Histogram",
+    "PayloadTrail",
     "Recorder",
     "ReconcileReport",
     "ReconciliationError",
     "Span",
+    "audit_recorder",
+    "audit_window_programs",
     "check_compiled",
     "chrome_trace",
     "compare",
@@ -58,14 +95,26 @@ __all__ = [
     "compiled_collective_counts",
     "counters_snapshot",
     "expected_hierarchical_collectives",
+    "expected_sink_weights",
     "expected_tdm_collectives",
+    "get_gauge",
+    "get_histogram",
     "get_recorder",
+    "histograms_summary",
     "metrics_snapshot",
+    "mission_report",
+    "observe",
+    "prometheus_text",
+    "ratio_gauge",
     "record_scope",
+    "render_markdown",
+    "set_gauge",
     "set_reconcile",
     "set_tracing",
     "trace_scope",
     "tracing_enabled",
     "write_metrics",
+    "write_prometheus",
+    "write_report",
     "write_trace",
 ]

@@ -9,9 +9,14 @@ Two artifact kinds:
   final counter values ride in ``otherData`` plus one ``"C"`` counter
   sample per counter so they show up in the UI's counter track.
 - :func:`metrics_snapshot` / :func:`write_metrics` — a flat JSON dict of
-  counters and per-span-name timing aggregates, the machine-readable
-  summary the benchmark harness embeds in its ``BENCH_<name>.json``
-  files.
+  counters, gauges, histogram percentile summaries, and per-span-name
+  timing aggregates, the machine-readable summary the benchmark harness
+  embeds in its ``BENCH_<name>.json`` files.
+- :func:`prometheus_text` / :func:`write_prometheus` — the same metrics
+  in Prometheus-style text exposition (counters/gauges as single samples,
+  histograms as cumulative ``_bucket{le=...}`` series plus ``_sum`` /
+  ``_count``), so a run snapshot can be pushed at a scrape endpoint or
+  diffed with standard tooling.
 
 The exported event list is sorted by timestamp; ``tests/test_telemetry.py``
 checks the schema (valid JSON, required keys, monotonic non-negative
@@ -25,6 +30,7 @@ import json
 import pathlib
 from typing import Any, Dict, Iterator, List, Optional
 
+from repro.telemetry.metrics import histograms_summary
 from repro.telemetry.recorder import Recorder, get_recorder, record_scope
 
 _PID = 0  # single-process flight recorder; lanes are encoded as tids
@@ -85,6 +91,7 @@ def chrome_trace(rec: Optional[Recorder] = None) -> Dict[str, Any]:
         "displayTimeUnit": "ms",
         "otherData": {
             "counters": dict(sorted(rec.counters.items())),
+            "gauges": dict(sorted(rec.gauges.items())),
             "meta": dict(rec.meta),
         },
     }
@@ -99,10 +106,13 @@ def write_trace(path, rec: Optional[Recorder] = None) -> pathlib.Path:
 
 
 def metrics_snapshot(rec: Optional[Recorder] = None) -> Dict[str, Any]:
-    """Counters + per-span timing aggregates as one flat JSON-able dict."""
+    """Counters, gauges, histogram percentile digests, and per-span timing
+    aggregates as one flat JSON-able dict."""
     rec = rec or get_recorder()
     return {
         "counters": dict(sorted(rec.counters.items())),
+        "gauges": dict(sorted(rec.gauges.items())),
+        "histograms": histograms_summary(rec),
         "spans": rec.span_stats(),
         "n_spans": len(rec.spans),
         "n_events": len(rec.events),
@@ -114,6 +124,55 @@ def write_metrics(path, rec: Optional[Recorder] = None) -> pathlib.Path:
     out = pathlib.Path(path)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(metrics_snapshot(rec), indent=1))
+    return out
+
+
+def _prom_name(name: str) -> str:
+    """Dotted recorder names -> Prometheus metric names (``[a-zA-Z0-9_]``,
+    non-digit first char — every recorder name already starts with a
+    subsystem word, so prefixing is unnecessary)."""
+    return "".join(c if c.isalnum() else "_" for c in name)
+
+
+def _prom_value(v: float) -> str:
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(float(v))
+
+
+def prometheus_text(rec: Optional[Recorder] = None) -> str:
+    """Render the recorder as Prometheus-style text exposition.
+
+    Counters and gauges become single samples with ``# TYPE`` headers;
+    histograms become the standard cumulative ``_bucket{le="..."}`` series
+    (``+Inf`` bucket == ``_count``) plus ``_sum`` and ``_count`` samples.
+    """
+    rec = rec or get_recorder()
+    lines: List[str] = []
+    for name, value in sorted(rec.counters.items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} counter")
+        lines.append(f"{pn} {_prom_value(value)}")
+    for name, value in sorted(rec.gauges.items()):
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} gauge")
+        lines.append(f"{pn} {_prom_value(value)}")
+    for name in sorted(rec.hists):
+        h = rec.hists[name]
+        pn = _prom_name(name)
+        lines.append(f"# TYPE {pn} histogram")
+        for bound, cum in zip(h.bounds, h.cumulative()):
+            lines.append(f'{pn}_bucket{{le="{_prom_value(bound)}"}} {cum}')
+        lines.append(f'{pn}_bucket{{le="+Inf"}} {h.count}')
+        lines.append(f"{pn}_sum {_prom_value(h.total)}")
+        lines.append(f"{pn}_count {h.count}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
+def write_prometheus(path, rec: Optional[Recorder] = None) -> pathlib.Path:
+    out = pathlib.Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(prometheus_text(rec))
     return out
 
 

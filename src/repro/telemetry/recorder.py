@@ -39,7 +39,10 @@ import time
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 # Buffers are bounded so a default-on recorder in a long-running service
-# cannot grow without limit; drops are themselves counted.
+# cannot grow without limit; drops are themselves counted. Mirrors the
+# ``dropped_log_max`` idiom from ``MultiWindowRouter``: the MOST RECENT
+# entries are retained (drop-oldest), because in a long tracing run the
+# tail — the windows around whatever went wrong — is the part you want.
 MAX_SPANS = 100_000
 MAX_EVENTS = 100_000
 
@@ -79,13 +82,27 @@ class Recorder:
                     programs themselves are unchanged).
     """
 
-    def __init__(self, tracing: bool = False, reconcile: bool = False):
+    def __init__(
+        self,
+        tracing: bool = False,
+        reconcile: bool = False,
+        max_spans: Optional[int] = None,
+        max_events: Optional[int] = None,
+    ):
         self.tracing = bool(tracing)
         self.reconcile = bool(reconcile)
         self.counters: Dict[str, float] = {}
+        # gauges (last-value-wins) and fixed-bucket histograms — written
+        # through repro.telemetry.metrics, same default-on host-side
+        # discipline as counters (hists values are metrics.Histogram;
+        # typed Any here so this module stays import-root).
+        self.gauges: Dict[str, float] = {}
+        self.hists: Dict[str, Any] = {}
         self.spans: List[Span] = []
         self.events: List[Event] = []
         self.meta: Dict[str, Any] = {}
+        self.max_spans = MAX_SPANS if max_spans is None else int(max_spans)
+        self.max_events = MAX_EVENTS if max_events is None else int(max_events)
         self._t0_ns = time.perf_counter_ns()
 
     # -- clock ------------------------------------------------------------
@@ -113,10 +130,11 @@ class Recorder:
     def event(self, name: str, cat: str = "event", tid: int = 0, **args) -> None:
         if not self.tracing:
             return
-        if len(self.events) >= MAX_EVENTS:
-            self.counter("telemetry.dropped_events")
-            return
         self.events.append(Event(name, cat, self.now_us(), args, tid))
+        if len(self.events) > self.max_events:
+            drop = len(self.events) - self.max_events
+            del self.events[:drop]
+            self.counter("telemetry.dropped_events", drop)
 
     @contextlib.contextmanager
     def span(
@@ -132,12 +150,13 @@ class Recorder:
         try:
             yield args
         finally:
-            if len(self.spans) >= MAX_SPANS:
-                self.counter("telemetry.dropped_spans")
-            else:
-                self.spans.append(
-                    Span(name, cat, t0, self.now_us() - t0, dict(args), tid)
-                )
+            self.spans.append(
+                Span(name, cat, t0, self.now_us() - t0, dict(args), tid)
+            )
+            if len(self.spans) > self.max_spans:
+                drop = len(self.spans) - self.max_spans
+                del self.spans[:drop]
+                self.counter("telemetry.dropped_spans", drop)
 
     # -- introspection ----------------------------------------------------
     def span_stats(self) -> Dict[str, Dict[str, float]]:
@@ -156,6 +175,8 @@ class Recorder:
 
     def clear(self) -> None:
         self.counters.clear()
+        self.gauges.clear()
+        self.hists.clear()
         self.spans.clear()
         self.events.clear()
         self.meta.clear()

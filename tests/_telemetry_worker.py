@@ -208,8 +208,10 @@ def test_groundseg_counters_match_window_oracle_and_trace():
         pipeline_depth=GS_CFG.pipeline_depth,
     )
     want = {}
+    programs = []
     for _ in range(rounds):
         wp = router.plan_window(base_rels, alive=set(range(N)))
+        programs.append(wp)
         for kind, cnt in aggregation.expected_window_collectives(
             wp, _n_buckets(state), compression=GS_CFG.compression, pool=True
         ).items():
@@ -220,6 +222,32 @@ def test_groundseg_counters_match_window_oracle_and_trace():
     check(
         "recorded collective counters == expected_window_collectives "
         f"summed over {rounds} windows: {want}",
+        True,
+    )
+
+    # route-provenance audit of the EXECUTED run: replay every payload's
+    # hop trail through the twin programs, checked against the slot
+    # relations, the decay**age staleness weights, and the lifecycle
+    # events the traced run actually emitted
+    verdict = telemetry.audit_window_programs(
+        programs,
+        decay=GS_CFG.staleness_decay,
+        slots=base_rels,
+        weights=[
+            aggregation.staleness_sink_weights(
+                wp.uplink, wp.delivered_ages, GS_CFG.staleness_decay
+            )
+            for wp in programs
+        ],
+        events=rec.events,
+    )
+    assert verdict.ok, [str(v) for v in verdict.violations]
+    assert verdict.n_windows == rounds and verdict.events_checked > 0
+    assert verdict.n_payloads == sum(len(wp.ages) for wp in programs)
+    check(
+        f"route-provenance audit green over the executed run: "
+        f"{verdict.n_payloads} payloads / {verdict.n_hops} hops / "
+        f"{verdict.events_checked} lifecycle events, 0 violations",
         True,
     )
 

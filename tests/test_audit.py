@@ -1,0 +1,318 @@
+"""Route-provenance auditor (telemetry/audit.py): a clean plan audits
+green, and every tamper class — misroute, phantom hop, nonexistent link,
+capacity overlap, age-ledger drift, staleness mis-weight, lifecycle-event
+divergence — is caught as a structured violation."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import telemetry
+from repro.core.relation import Relation
+from repro.core.schedule import ring
+from repro.groundseg import routing
+from repro.telemetry import audit
+from repro.telemetry.recorder import Event
+
+N = 6
+SINKS = frozenset({4, 5})
+SLOTS = 3
+
+
+def plan_programs(windows=3, occlude_at=None):
+    """A small multi-window plan over ring relations: every satellite can
+    reach a sink within the horizon. ``occlude_at`` makes node 0 contact-
+    less (alive, so it injects, but unreachable) for that window — its
+    payload carries and delivers stale, exercising the age ledger."""
+    rels = [ring(N)] * SLOTS
+    router = routing.MultiWindowRouter(
+        N, SINKS, max_staleness_windows=2, pipeline_depth=2
+    )
+    programs = []
+    for w in range(windows):
+        slots = rels
+        if occlude_at is not None and w == occlude_at:
+            others = set(range(N)) - {0}
+            slots = [r.restrict(others) for r in rels]
+        programs.append(router.plan_window(slots))
+    return rels, programs
+
+
+def lifecycle_events(programs):
+    """The event stream a faithful executor would emit (matching the
+    fl_train driver's schema: queued carries no age)."""
+    evs = []
+    for wp in programs:
+        for s in sorted(wp.injected):
+            evs.append(Event("payload.queued", "payload", 0.0,
+                             {"window": wp.window, "source": s}))
+        for s, a in sorted(wp.delivered_ages.items()):
+            evs.append(Event("payload.delivered", "payload", 0.0,
+                             {"window": wp.window, "source": s, "age": a}))
+        for s, a in sorted(wp.residual.items()):
+            evs.append(Event("payload.carried", "payload", 0.0,
+                             {"window": wp.window, "source": s, "age": a}))
+        for s, a in sorted(wp.dropped.items()):
+            evs.append(Event("payload.dropped", "payload", 0.0,
+                             {"window": wp.window, "source": s, "age": a}))
+    return evs
+
+
+def true_weights(programs, decay):
+    return [
+        _weights_vec(audit.expected_sink_weights(wp, decay))
+        for wp in programs
+    ]
+
+
+def _weights_vec(per_sink):
+    vec = np.zeros(N, dtype=np.float32)
+    for k, v in per_sink.items():
+        vec[k] = v
+    return vec
+
+
+def test_clean_plan_audits_green_with_trails_and_counters():
+    rels, programs = plan_programs()
+    with telemetry.record_scope() as rec:
+        report = audit.audit_window_programs(
+            programs, decay=0.5, slots=rels,
+            weights=true_weights(programs, 0.5),
+            events=lifecycle_events(programs),
+        )
+        assert rec.get_counter("audit.windows") == len(programs)
+        assert rec.get_counter("audit.violations") == 0
+    assert report.ok and report.raise_if_violations() is report
+    assert report.n_windows == 3
+    assert report.n_payloads == sum(len(wp.ages) for wp in programs)
+    assert report.events_checked == sum(
+        len(wp.injected) + len(wp.delivered_ages) + len(wp.residual)
+        + len(wp.dropped) for wp in programs
+    )
+    # every payload has a trail; delivered ones end at a sink
+    for wp in programs:
+        for s in wp.ages:
+            trail = report.trails[(wp.window, s)]
+            assert trail.age == wp.ages[s]
+            if s in wp.delivered_ages:
+                assert trail.sink in SINKS and trail.hops
+                assert trail.hops[-1][2] == trail.sink
+            else:
+                assert trail.sink is None
+    d = report.summary()
+    assert d["ok"] and d["n_violations"] == 0 and d["n_hops"] == report.n_hops
+
+
+def test_outage_window_carries_and_audits_green():
+    rels, programs = plan_programs(windows=4, occlude_at=0)
+    report = audit.audit_window_programs(programs, decay=0.5, slots=rels)
+    assert report.ok
+    # the occluded node's payload carried through and landed stale
+    stale = [wp.delivered_ages.get(0) for wp in programs]
+    assert any(a not in (None, 0) for a in stale)
+
+
+def test_misrouted_payload_is_caught():
+    rels, programs = plan_programs()
+    wp = programs[1]
+    d = {k: set(v) for k, v in wp.uplink.delivered.items()}
+    k_from = next(k for k in sorted(d) if d[k])
+    k_to = next(k for k in sorted(d) if k != k_from)
+    moved = sorted(d[k_from])[0]
+    d[k_from].discard(moved)
+    d[k_to].add(moved)
+    tampered = dataclasses.replace(
+        wp,
+        uplink=dataclasses.replace(
+            wp.uplink, delivered={k: frozenset(v) for k, v in d.items()}
+        ),
+    )
+    report = audit.audit_window_programs(
+        programs[:1] + [tampered] + programs[2:], decay=0.5, slots=rels
+    )
+    assert not report.ok
+    assert {v.kind for v in report.violations} == {"misroute"}
+    with pytest.raises(audit.AuditError, match="misroute"):
+        report.raise_if_violations()
+
+
+def test_phantom_hop_and_nonexistent_link_are_caught():
+    rels, programs = plan_programs()
+    wp = programs[0]
+    # a send from a sink (which never holds an uplink payload) over an
+    # edge absent from the ring: two violations from one tampered hop
+    bad_sends = (((4, 1),) + wp.uplink.slot_sends[0],) + wp.uplink.slot_sends[1:]
+    tampered = dataclasses.replace(
+        wp, uplink=dataclasses.replace(wp.uplink, slot_sends=bad_sends)
+    )
+    report = audit.audit_window_programs([tampered], decay=0.5, slots=rels)
+    kinds = {v.kind for v in report.violations}
+    assert "phantom-hop" in kinds and "no-such-link" in kinds
+
+
+def test_capacity_overlap_at_depth2_is_caught():
+    rels, programs = plan_programs()
+    wp = next(
+        p for p in programs
+        if p.downlink is not None and p.lagged_downlink
+        and any(p.uplink.slot_sends)
+    )
+    t, sends = next(
+        (t, s) for t, s in enumerate(wp.uplink.slot_sends) if s
+    )
+    # downlink floods over an edge the uplink already occupies in slot t
+    src, dst = sends[0]
+    down_sends = list(wp.downlink.slot_sends)
+    while len(down_sends) <= t:
+        down_sends.append(())
+    down_sends[t] = down_sends[t] + ((src, dst),)
+    tampered = dataclasses.replace(
+        wp,
+        downlink=dataclasses.replace(
+            wp.downlink, slot_sends=tuple(down_sends)
+        ),
+    )
+    programs2 = [tampered if p.window == wp.window else p for p in programs]
+    report = audit.audit_window_programs(programs2, decay=0.5, slots=rels)
+    assert any(v.kind == "capacity-overlap" for v in report.violations)
+
+
+def test_age_ledger_drift_is_caught():
+    rels, programs = plan_programs(windows=4, occlude_at=0)
+    # find a window that delivered the carried (stale) payload and shave a
+    # window off its reported age — the cross-window ledger must object
+    wi, wp = next(
+        (i, p) for i, p in enumerate(programs)
+        if p.delivered_ages.get(0, 0) > 0
+    )
+    lied_ages = dict(wp.ages)
+    lied_ages[0] = wp.ages[0] - 1
+    lied_delivered = dict(wp.delivered_ages)
+    lied_delivered[0] = wp.ages[0] - 1
+    tampered = dataclasses.replace(
+        wp, ages=lied_ages, delivered_ages=lied_delivered
+    )
+    report = audit.audit_window_programs(
+        programs[:wi] + [tampered] + programs[wi + 1:], decay=0.5,
+    )
+    assert any(
+        v.kind == "age" and v.payload == 0 for v in report.violations
+    )
+
+
+def test_misweighted_aggregation_is_caught():
+    rels, programs = plan_programs()
+    weights = true_weights(programs, 0.5)
+    assert audit.audit_window_programs(
+        programs, decay=0.5, weights=weights
+    ).ok
+    weights[1] = weights[1].copy()
+    k = next(iter(sorted(SINKS)))
+    weights[1][k] += 0.125   # one wrong FedAvg denominator
+    report = audit.audit_window_programs(
+        programs, decay=0.5, weights=weights
+    )
+    assert [v.kind for v in report.violations] == ["weights"]
+    assert report.violations[0].window == programs[1].window
+
+
+def test_expected_sink_weights_match_f32_recurrence():
+    _, programs = plan_programs(windows=4, occlude_at=0)
+    for wp in programs:
+        want = audit.expected_sink_weights(wp, 0.7)
+        for k, srcs in wp.uplink.delivered.items():
+            acc = np.float32(1.0)
+            for s in sorted(srcs):
+                w = np.float32(1.0)
+                for _ in range(wp.delivered_ages[s]):
+                    w = np.float32(w * np.float32(0.7))
+                acc = np.float32(acc + w)
+            assert want[k] == float(acc)
+
+
+def test_lifecycle_event_divergence_is_caught():
+    rels, programs = plan_programs()
+    evs = lifecycle_events(programs)
+    good = audit.audit_window_programs(programs, decay=0.5, events=evs)
+    assert good.ok
+    # executor lies about a delivered payload's age
+    bad = [
+        dataclasses.replace(e, args=dict(e.args, age=e.args["age"] + 1))
+        if e.name == "payload.delivered" and e.args["source"] == 0
+        else e
+        for e in evs
+    ]
+    report = audit.audit_window_programs(programs, decay=0.5, events=bad)
+    assert any(v.kind == "events" for v in report.violations)
+    # an event for a window outside the audited range is flagged too
+    stray = evs + [Event("payload.queued", "payload", 0.0,
+                         {"window": 99, "source": 1})]
+    report = audit.audit_window_programs(programs, decay=0.5, events=stray)
+    assert any(
+        v.kind == "events" and v.window == 99 for v in report.violations
+    )
+
+
+def test_non_consecutive_windows_rejected():
+    _, programs = plan_programs()
+    with pytest.raises(ValueError, match="consecutive"):
+        audit.audit_window_programs([programs[0], programs[2]])
+    assert audit.audit_window_programs([]).ok
+
+
+def test_audit_recorder_uses_captured_events():
+    rels, programs = plan_programs()
+    with telemetry.record_scope(tracing=True) as rec:
+        for e in lifecycle_events(programs):
+            rec.event(e.name, cat=e.cat, **e.args)
+        report = audit.audit_recorder(rec, programs, decay=0.5, slots=rels)
+    assert report.ok and report.events_checked > 0
+
+
+def test_ci_smoke_cli_green(capsys):
+    rc = audit.main(["--ci-smoke", "--windows", "3"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "0 violation(s)" in out
+
+
+def test_mission_report_renders_audit_and_metrics(tmp_path):
+    from repro.telemetry import metrics, report as report_mod
+
+    rels, programs = plan_programs()
+    with telemetry.record_scope(tracing=True) as rec:
+        with rec.span("stage.plan"):
+            verdict = audit.audit_window_programs(
+                programs, decay=0.5, slots=rels
+            )
+        metrics.set_gauge("demo.gauge", 0.5)
+        doc = report_mod.mission_report(
+            rec, audit=verdict, title="unit run", extra={"rounds": 3}
+        )
+        md, js = report_mod.write_report(
+            tmp_path / "sub" / "run", rec, audit=verdict, title="unit run"
+        )
+    assert doc["audit"]["ok"] and doc["gauges"]["demo.gauge"] == 0.5
+    assert doc["stages"]["stage.plan"]["count"] == 1
+    assert "audit.hops_per_payload" in doc["histograms"]
+    text = md.read_text()
+    assert text.startswith("# unit run")
+    assert "Route-provenance audit: PASS" in text
+    assert "`audit.hops_per_payload`" in text
+    import json
+
+    saved = json.loads(js.read_text())
+    assert saved["audit"]["n_violations"] == 0
+    # a failing audit renders its violations
+    bad = dataclasses.replace(
+        programs[0],
+        delivered_ages={
+            s: a + 1 for s, a in programs[0].delivered_ages.items()
+        },
+    )
+    verdict2 = audit.audit_window_programs([bad], decay=0.5)
+    text2 = report_mod.render_markdown(
+        report_mod.mission_report(audit=verdict2, title="bad run")
+    )
+    assert "Route-provenance audit: FAIL" in text2
+    assert "[age]" in text2

@@ -58,6 +58,22 @@ def test_buffers_bounded_with_drop_counters(monkeypatch):
     assert len(rec.spans) == 2 and len(rec.events) == 2
     assert rec.counters["telemetry.dropped_spans"] == 3
     assert rec.counters["telemetry.dropped_events"] == 3
+    # drop-OLDEST (dropped_log_max idiom): the tail of a long run survives,
+    # which is the part a post-mortem wants
+    assert [s.name for s in rec.spans] == ["s3", "s4"]
+    assert [e.name for e in rec.events] == ["e3", "e4"]
+
+
+def test_buffer_bounds_per_recorder_ctor_args():
+    rec = telemetry.Recorder(tracing=True, max_spans=3, max_events=1)
+    for i in range(6):
+        with rec.span(f"s{i}"):
+            pass
+        rec.event(f"e{i}")
+    assert [s.name for s in rec.spans] == ["s3", "s4", "s5"]
+    assert [e.name for e in rec.events] == ["e5"]
+    assert rec.counters["telemetry.dropped_spans"] == 3
+    assert rec.counters["telemetry.dropped_events"] == 5
 
 
 def test_record_scope_isolation_and_inheritance():
@@ -521,6 +537,170 @@ def test_check_regression_telemetry_loading_and_exit_code(tmp_path, capsys):
     # same run with --no-telemetry (rows match): clean
     rc = check_regression.main(
         ["--run", str(run), "--baseline", str(base), "--no-telemetry"]
+    )
+    capsys.readouterr()
+    assert rc == 0
+
+
+# ------------------------------------------- metrics registry (ISSUE 9)
+def test_histogram_fixed_buckets_quantiles_and_summary():
+    from repro.telemetry import metrics
+
+    h = metrics.Histogram(bounds=(1, 2, 4, 8))
+    for v in (0.5, 1.5, 3, 3, 7, 100):
+        h.observe(v)
+    assert h.count == 6 and h.total == pytest.approx(115.0)
+    assert h.vmin == 0.5 and h.vmax == 100
+    # cumulative counts are monotone and end at the observation count
+    cum = h.cumulative()
+    assert cum == sorted(cum) and cum[-1] == h.count
+    s = h.summary()
+    assert set(s) == {"count", "sum", "mean", "min", "max", "p50", "p90",
+                      "p99"}
+    assert s["mean"] == pytest.approx(115.0 / 6)
+    # quantiles interpolate within buckets and clamp to observed extremes
+    assert h.quantile(0.0) == 0.5
+    assert h.quantile(1.0) == 100
+    assert 1 <= h.quantile(0.5) <= 4
+    # overflow bucket resolves to the observed max, not infinity
+    assert h.quantile(0.99) <= 100
+
+
+def test_metrics_registry_lands_on_active_recorder():
+    from repro.telemetry import metrics
+
+    with telemetry.record_scope() as rec:
+        metrics.set_gauge("g.x", 0.25)
+        metrics.ratio_gauge("g.rate", 3, 4)
+        metrics.ratio_gauge("g.skipped", 1, 0)   # zero denom: no sample
+        for v in (1, 2, 40):
+            metrics.observe("q.depth", v, buckets=metrics.COUNT_BUCKETS)
+        assert rec.gauges == {"g.x": 0.25, "g.rate": 0.75}
+        assert metrics.get_gauge("g.rate") == 0.75
+        assert metrics.get_histogram("q.depth").count == 3
+        snap = telemetry.metrics_snapshot(rec)
+    assert snap["gauges"]["g.rate"] == 0.75
+    assert snap["histograms"]["q.depth"]["count"] == 3
+    assert snap["histograms"]["q.depth"]["max"] == 40
+    # scope exit: nothing leaked onto the enclosing recorder
+    assert "g.x" not in telemetry.get_recorder().gauges
+
+
+def test_prometheus_text_exposition(tmp_path):
+    from repro.telemetry import metrics
+
+    with telemetry.record_scope() as rec:
+        rec.counter("fl.rounds", 4)
+        metrics.set_gauge("cache.hit_rate", 0.5)
+        for v in (0.5, 1.5, 3):
+            metrics.observe("lat", v, buckets=(1, 2, 4))
+        text = telemetry.prometheus_text(rec)
+        out = telemetry.write_prometheus(tmp_path / "m.prom", rec)
+    assert out.read_text() == text
+    lines = text.splitlines()
+    assert "# TYPE fl_rounds counter" in lines and "fl_rounds 4" in lines
+    assert "# TYPE cache_hit_rate gauge" in lines
+    assert "cache_hit_rate 0.5" in lines
+    # cumulative buckets: le=1 -> 1 obs, le=2 -> 2, le=4 -> 3, +Inf == count
+    assert 'lat_bucket{le="1"} 1' in lines
+    assert 'lat_bucket{le="2"} 2' in lines
+    assert 'lat_bucket{le="4"} 3' in lines
+    assert 'lat_bucket{le="+Inf"} 3' in lines
+    assert "lat_sum 5" in lines and "lat_count 3" in lines
+
+
+def test_chrome_trace_counter_samples_after_spans():
+    """Counter ``"C"`` samples ride at the trace end: every one sorts at or
+    after the last span/event timestamp, so the Perfetto counter track
+    shows the final values, and names stay in sorted order."""
+    with telemetry.record_scope(tracing=True) as rec:
+        with rec.span("w"):
+            rec.event("mark")
+        rec.counter("b.count", 2)
+        rec.counter("a.count", 1)
+        doc = json.loads(json.dumps(telemetry.chrome_trace(rec)))
+    evs = doc["traceEvents"]
+    t_busy = max(
+        ev["ts"] + ev.get("dur", 0.0) for ev in evs if ev["ph"] in ("X", "i")
+    )
+    counter_evs = [ev for ev in evs if ev["ph"] == "C"]
+    assert [ev["name"] for ev in counter_evs] == ["a.count", "b.count"]
+    assert all(ev["ts"] >= t_busy for ev in counter_evs)
+    # and the trailing suffix of the sorted list is exactly the counters
+    assert [ev["ph"] for ev in evs[-len(counter_evs):]] == ["C", "C"]
+    assert doc["otherData"]["counters"] == {"a.count": 1, "b.count": 2}
+    assert doc["otherData"]["gauges"] == {}
+
+
+def test_pop_counters_and_snapshot_under_nested_scopes():
+    """pop_counters/counters_snapshot prefix semantics: prefix filtering is
+    plain startswith on the ACTIVE recorder, and nested scopes neither see
+    nor disturb the enclosing recorder's counters."""
+    with telemetry.record_scope() as outer:
+        outer.counter("sub.a", 1)
+        outer.counter("sub.b", 2)
+        outer.counter("other", 9)
+        with telemetry.record_scope() as inner:
+            inner.counter("sub.a", 100)
+            # snapshot reads the innermost scope only
+            assert telemetry.counters_snapshot() == {"sub.a": 100}
+            assert telemetry.counters_snapshot("sub.") == {"sub.a": 100}
+            assert inner.pop_counters("sub.") == {"sub.a": 100}
+            assert inner.counters == {}
+        # inner scope popped its own counters; outer's are untouched
+        assert telemetry.counters_snapshot("sub.") == {"sub.a": 1, "sub.b": 2}
+        popped = outer.pop_counters("sub.")
+        assert popped == {"sub.a": 1, "sub.b": 2}
+        assert telemetry.counters_snapshot() == {"other": 9}
+
+
+# ------------------------------------- check_regression silent-pass guards
+def test_check_regression_fails_on_zero_row_summaries(tmp_path, capsys):
+    from benchmarks import check_regression
+
+    rows = [{"bench": "b", "cell": "c", "permutes": 4}]
+    good = tmp_path / "good.json"
+    empty = tmp_path / "empty.json"
+    good.write_text(json.dumps(rows))
+    empty.write_text(json.dumps({"bench": "b", "rows": [],
+                                 "telemetry": {}}))
+    # empty RUN fails (was: baseline rows each fail row-match — keep that
+    # too — but the guard names the real cause)
+    rc = check_regression.main(
+        ["--run", str(empty), "--baseline", str(good)]
+    )
+    out = capsys.readouterr().out
+    assert rc == 1 and "zero BENCH rows" in out
+    # empty BASELINE fails (was: nothing to iterate -> exit 0, silent pass)
+    rc = check_regression.main(
+        ["--run", str(good), "--baseline", str(empty)]
+    )
+    out = capsys.readouterr().out
+    assert rc == 1 and "zero BENCH rows" in out
+
+
+def test_check_regression_fails_when_nothing_compared(tmp_path, capsys):
+    from benchmarks import check_regression
+
+    # rows match but carry NONE of the default metrics: the old gate
+    # compared zero cells and exited 0
+    rows = [{"bench": "b", "cell": "c", "wall_ms": 1.0}]
+    base = tmp_path / "base.json"
+    run = tmp_path / "run.json"
+    base.write_text(json.dumps(rows))
+    run.write_text(json.dumps(rows))
+    rc = check_regression.main(["--run", str(run), "--baseline", str(base)])
+    out = capsys.readouterr().out
+    assert rc == 1 and "zero metric cells compared" in out
+    # an explicitly requested metric that matches no baseline row fails
+    # (typo protection); the same request naming a real metric passes
+    rc = check_regression.main(
+        ["--run", str(run), "--baseline", str(base), "--metrics", "wall_msx"]
+    )
+    out = capsys.readouterr().out
+    assert rc == 1 and "matches no baseline row" in out
+    rc = check_regression.main(
+        ["--run", str(run), "--baseline", str(base), "--metrics", "wall_ms"]
     )
     capsys.readouterr()
     assert rc == 0
