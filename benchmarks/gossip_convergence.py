@@ -20,8 +20,7 @@ from repro.core.gossip import (
     spectral_gap,
 )
 from repro.core.relation import Relation
-from repro.constellation.contact_plan import legacy_duty_cycle_relation
-from repro.constellation.orbits import WalkerDelta
+from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 from repro.core.schedule import hypercube_schedule, ring
 
 
@@ -54,8 +53,12 @@ def main(argv=None):
             hc = hypercube_schedule(n)
             topos["hypercube"] = lambda t, hc=hc: hc[t % len(hc)]
         if n % 4 == 0:
-            g = WalkerDelta(total=n, planes=4)
-            topos["walker 4-plane"] = lambda t, g=g: legacy_duty_cycle_relation(g, t)
+            scn = build_scenario(ScenarioSpec(
+                shells=(ShellSpec(planes=4, per_plane=n // 4),),
+                n_ground=0, steps=32,
+            ))
+            rels = scn.relations()
+            topos["walker 4-plane"] = lambda t, r=rels: r[t % len(r)]
 
         for name, gen in topos.items():
             gap = spectral_gap(metropolis_weights(gen(0), n))

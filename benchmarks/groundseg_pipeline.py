@@ -47,15 +47,13 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import telemetry
-from repro.constellation import contact_plan, cost, orbits
+from repro.constellation import cost
+from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 from repro.groundseg import aggregation, routing
 from repro.launch.hlo_stats import collective_stats
 from repro.telemetry import audit
 
-GROUND_SITES = [
-    orbits.GroundStation(0.0, 0.0, name="equator"),
-    orbits.GroundStation(45.0, 120.0, name="midlat-e"),
-]
+N_GS = 2   # canonical scenario.GROUND_SITES prefix (equator + midlat-e)
 
 QUICK_SHELLS = [(2, 3)]
 DEFAULT_SHELLS = [(2, 3), (2, 4)]
@@ -63,20 +61,19 @@ FULL_SHELLS = [(2, 3), (2, 4), (3, 4), (4, 5)]
 
 
 def build_sched(planes, per_plane, steps, altitude_km, antennas, payload):
-    geom = orbits.WalkerDelta(
-        total=planes * per_plane, planes=planes,
-        altitude_km=altitude_km, inclination_deg=60.0,
-    )
-    plan = contact_plan.build_contact_plan(
-        geom,
-        duration_s=geom.period_s,
-        step_s=geom.period_s / steps,
-        ground_stations=GROUND_SITES,
-        max_range_km=2.0 * (orbits.R_EARTH_KM + altitude_km),
-    )
-    sinks = sorted(range(geom.total, plan.n_nodes))
-    sched = plan.schedule(antennas=antennas, payload_bytes=payload)
-    return geom, plan, sched, sinks
+    """One scenario-factory deployment; the ground segment is the canonical
+    ``scenario.GROUND_SITES`` prefix (this file used to carry its own copy)."""
+    scn = build_scenario(ScenarioSpec(
+        shells=(ShellSpec(
+            planes=planes, per_plane=per_plane, altitude_km=altitude_km,
+        ),),
+        n_ground=N_GS,
+        steps=steps,
+        antennas=antennas,
+        payload_bytes=payload,
+    ))
+    sinks = sorted(scn.ground_ids)
+    return scn.geom, scn.plan, scn.schedule(), sinks
 
 
 def oracle_rows(shells, steps_list, staleness_list, payload, antennas,
@@ -102,7 +99,7 @@ def oracle_rows(shells, steps_list, staleness_list, payload, antennas,
                     row = dict(
                         bench="groundseg_pipeline",
                         planes=planes, per_plane=per, n_sats=n_sats,
-                        n_gs=len(GROUND_SITES), steps=steps,
+                        n_gs=N_GS, steps=steps,
                         staleness=stale, depth=depth,
                         window_s=th["window_s"],
                         est_occupancy_s=occ.time_s,

@@ -43,36 +43,27 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import telemetry
-from repro.constellation import contact_plan, cost, orbits
+from repro.constellation import cost
+from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 from repro.core import fl, tdm
 from repro.groundseg import aggregation, routing
 from repro.launch.hlo_stats import collective_stats
-
-GROUND_SITES = [
-    orbits.GroundStation(0.0, 0.0, name="equator"),
-    orbits.GroundStation(45.0, 120.0, name="midlat-e"),
-    orbits.GroundStation(-30.0, -60.0, name="midlat-s"),
-    orbits.GroundStation(60.0, 10.0, name="highlat"),
-]
 
 QUICK_SHELLS = [(2, 3), (2, 4)]
 FULL_SHELLS = [(2, 3), (2, 4), (3, 4), (4, 5)]
 
 
 def build_plan(planes, per_plane, n_gs, altitude_km, steps):
-    geom = orbits.WalkerDelta(
-        total=planes * per_plane, planes=planes,
-        altitude_km=altitude_km, inclination_deg=60.0,
-    )
-    plan = contact_plan.build_contact_plan(
-        geom,
-        duration_s=geom.period_s,
-        step_s=geom.period_s / steps,
-        ground_stations=GROUND_SITES[:n_gs],
-        max_range_km=2.0 * (orbits.R_EARTH_KM + altitude_km),
-    )
-    sinks = frozenset(range(geom.total, plan.n_nodes))
-    return geom, plan, sinks
+    """One scenario-factory deployment; the ground segment is the canonical
+    ``scenario.GROUND_SITES`` prefix (this file used to carry its own copy)."""
+    scn = build_scenario(ScenarioSpec(
+        shells=(ShellSpec(
+            planes=planes, per_plane=per_plane, altitude_km=altitude_km,
+        ),),
+        n_ground=n_gs,
+        steps=steps,
+    ))
+    return scn.geom, scn.plan, scn.ground_ids
 
 
 def oracle_rows(shells, gs_counts, payload_bytes, antennas, steps, altitude):

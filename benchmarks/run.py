@@ -17,6 +17,10 @@ the framework's own perf tables.
   plan_synthesis  mega-constellation plan synthesis: vectorized geometry /
               visibility / windows / routing-DP pipeline vs the retained
               legacy oracles (wall time + speedups)
+  serving     constellation serving: TDM-slotted inference end-to-end —
+              ground-station ingress, contact-graph routing, replica decode,
+              downlink; deterministic sweep + churn + measured decode
+              (subprocess: 8 devs)
   roofline    the 40-cell dry-run roofline table (reads experiments/dryrun)
 
 ``python -m benchmarks.run``            runs everything quick
@@ -226,6 +230,16 @@ def main(argv=None):
             ["--full"] if args.full else ["--smoke"],
             timeout=3600,
             name="pipeline",
+            out_dir=out_dir,
+        )
+
+    if want("serving"):
+        _banner("serving: TDM-slotted inference over the ground segment")
+        _subprocess_bench(
+            "benchmarks.serving_throughput",
+            ["--full"] if args.full else ["--smoke"],
+            timeout=3600,
+            name="serving",
             out_dir=out_dir,
         )
 

@@ -1,49 +1,322 @@
-"""Serving-throughput roofline per decode cell: tokens/s/chip and
-latency-per-token bounds from the dry-run artifacts — the numbers a serving
-capacity planner actually wants.
+"""Constellation serving throughput: end-to-end TDM-slotted inference.
 
-    latency_bound  = max(compute_s, memory_s, collective_s)   per step
-    tokens/s/chip  = global_batch / latency_bound / chips
-    batch-1 floor  = params_bytes/chip / HBM_bw  (weights-read floor)
+Requests arrive at ground stations, ride earliest-delivery contact-graph
+routes up to satellite model replicas, decode under the TDM slot structure
+(wave discipline per replica, continuous batching across the fleet), and
+return on downlink slots. Every cell is a full :class:`repro.serving.
+ServingEngine` run over a :func:`repro.constellation.scenario.
+build_scenario` deployment, route-provenance audited.
 
-Run: PYTHONPATH=src:. python -m benchmarks.serving_throughput
+Three layers, emitted as ``BENCH {json}`` lines (and optionally ``--out``):
+
+1. **Deterministic transport sweep** (pure host, :class:`NullDecoder`):
+   shells x ground-station counts x replica counts — delivered counts,
+   p50/p99 request latency and TTFT in slots, request throughput per slot
+   and per simulated second (slot durations from the contact plan), audit
+   violations. Bit-deterministic, so the nightly trends it via
+   ``check_regression.py`` against ``benchmarks/baselines/
+   serving_throughput.json``.
+2. **Churn cell** (deterministic): a replica dies mid-run and later
+   returns; the gate is zero lost requests and a green audit — re-route,
+   never lose.
+3. **Measured decode** (8 forced host devices): the same engine driving a
+   real stacked-``shard_map`` :class:`ModelDecoder` fleet; wall clock is
+   advisory (token counts and audit stay deterministic). Skipped with
+   ``--no-measured`` or when the device pool is too small.
+
+Run as its own process (device count lock):
+  PYTHONPATH=src:. python -m benchmarks.serving_throughput --smoke
 """
 
-from __future__ import annotations
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
 
 import argparse
 import json
 import pathlib
+import time
 
-from benchmarks.roofline import recompute_terms
-from repro.configs import archs
+from repro import telemetry
+from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
+from repro.serving import (
+    NullDecoder,
+    ReplicaFleet,
+    ServingEngine,
+    audit_serving_run,
+    synthesize_workload,
+)
+from repro.telemetry.audit import AuditReport
+
+QUICK_SHELLS = [(2, 3), (2, 4), (3, 4)]
+FULL_SHELLS = [(2, 3), (2, 4), (3, 4), (4, 5)]
+
+
+def make_scenario(planes, per_plane, n_gs, steps):
+    return build_scenario(ScenarioSpec(
+        shells=(ShellSpec(planes=planes, per_plane=per_plane),),
+        n_ground=n_gs,
+        steps=steps,
+    ))
+
+
+def pick_replicas(n_sats, n_replicas):
+    """Spread replicas across the shell (every n/k-th satellite)."""
+    n_replicas = min(n_replicas, n_sats)
+    return sorted({i * n_sats // n_replicas for i in range(n_replicas)})
+
+
+def run_cell(scn, replica_ids, batch, workload, *, on_slot=None,
+             decoder=None, max_slots=None):
+    """One engine run + audit; returns (report, audit, engine)."""
+    decoder = decoder or NullDecoder(len(replica_ids), batch)
+    fleet = ReplicaFleet(replica_ids, batch, decoder)
+    eng = ServingEngine.from_scenario(scn, fleet)
+    report = eng.run(workload, max_slots=max_slots, on_slot=on_slot)
+    verdict = audit_serving_run(
+        report.records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=replica_ids,
+    )
+    return report, verdict, eng
+
+
+def transport_rows(shells, gs_counts, replica_counts, *, steps, n_requests,
+                   rate, max_new, batch):
+    rows, audits = [], []
+    for planes, per in shells:
+        for n_gs in gs_counts:
+            scn = make_scenario(planes, per, n_gs, steps)
+            for n_rep in replica_counts:
+                if n_rep >= scn.n_sats:
+                    continue
+                reps = pick_replicas(scn.n_sats, n_rep)
+                workload = synthesize_workload(
+                    n_requests, scn.ground_ids, rate_per_slot=rate,
+                    max_new=max_new, seed=scn.spec.seed,
+                )
+                report, verdict, _ = run_cell(scn, reps, batch, workload)
+                audits.append(verdict)
+                row = dict(
+                    bench="serving_throughput",
+                    engine="null",
+                    planes=planes, per_plane=per,
+                    n_replicas=len(reps), batch=batch,
+                    **scn.describe(),
+                    **report.summary(),
+                    audit_violations=float(len(verdict.violations)),
+                )
+                rows.append(row)
+    return rows, audits
+
+
+def churn_rows(*, steps, n_requests, rate, max_new, batch):
+    """Kill the first replica mid-run, restore it a quarter-epoch later:
+    the deterministic re-route-not-lose cell the nightly gates on."""
+    scn = make_scenario(2, 3, 2, steps)
+    reps = pick_replicas(scn.n_sats, 2)
+    workload = synthesize_workload(
+        n_requests, scn.ground_ids, rate_per_slot=rate, max_new=max_new,
+    )
+    epoch = len(scn.slots())
+    fail_at = epoch // 2
+    restore_at = fail_at + max(2, epoch // 4)
+
+    def on_slot(eng, slot):
+        if slot == fail_at:
+            eng.fail(reps[0])
+        elif slot == restore_at:
+            eng.restore(reps[0])
+
+    report, verdict, _ = run_cell(
+        scn, reps, batch, workload, on_slot=on_slot,
+    )
+    summ = report.summary()
+    row = dict(
+        bench="serving_churn",
+        engine="null",
+        planes=2, per_plane=3, n_replicas=len(reps), batch=batch,
+        **scn.describe(),
+        delivered=summ["delivered"],
+        undelivered=summ["undelivered"],
+        lost_requests=float(summ["undelivered"]),
+        retries=summ["retries"],
+        n_slots=summ["n_slots"],
+        audit_violations=float(len(verdict.violations)),
+    )
+    return [row], [verdict]
+
+
+def measured_rows(*, steps, n_requests, max_new, batch):
+    """Real stacked shard_map decode on the forced host-device mesh."""
+    import jax
+
+    from repro.configs import archs
+    from repro.serving import ModelDecoder
+
+    scn = make_scenario(2, 3, 2, steps)
+    reps = pick_replicas(scn.n_sats, 3)
+    if len(jax.devices()) < len(reps):
+        print(f"skipping measured cell: need {len(reps)} devices, "
+              f"have {len(jax.devices())}")
+        return [], []
+    cfg = archs.smoke_cfg(archs.get("gemma2-9b"))
+    decoder = ModelDecoder(cfg, len(reps), batch, max_len=32)
+    workload = synthesize_workload(
+        n_requests, scn.ground_ids, rate_per_slot=1.0, max_new=max_new,
+    )
+    t0 = time.perf_counter()
+    report, verdict, _ = run_cell(
+        scn, reps, batch, workload, decoder=decoder,
+    )
+    wall = time.perf_counter() - t0
+    summ = report.summary()
+    row = dict(
+        bench="serving_measured",
+        engine="model", arch=cfg.name,
+        planes=2, per_plane=3, n_replicas=len(reps), batch=batch,
+        **scn.describe(),
+        delivered=summ["delivered"],
+        undelivered=summ["undelivered"],
+        tokens=summ["tokens"],
+        n_slots=summ["n_slots"],
+        audit_violations=float(len(verdict.violations)),
+        host_wall_ms=wall * 1e3,
+        tok_per_host_s=summ["tokens"] / max(wall, 1e-9),
+    )
+    print(
+        f"measured model decode: {summ['delivered']}/{summ['n_requests']} "
+        f"delivered, {summ['tokens']} tokens in {wall*1e3:.0f} ms host wall "
+        f"({row['tok_per_host_s']:.1f} tok/s)"
+    )
+    return [row], [verdict]
+
+
+def merge_audits(audits):
+    total = AuditReport()
+    for a in audits:
+        total.n_windows += a.n_windows
+        total.n_payloads += a.n_payloads
+        total.n_hops += a.n_hops
+        total.n_delivered += a.n_delivered
+        total.n_dropped += a.n_dropped
+        total.events_checked += a.events_checked
+        total.violations.extend(a.violations)
+        total.trails.update(a.trails)
+    return total
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--dir", default="experiments/dryrun")
-    p.add_argument("--mesh", default="single")
+    p.add_argument("--smoke", action="store_true", help="small sweep")
+    p.add_argument("--full", action="store_true", help="larger shells")
+    p.add_argument("--steps", type=int, default=10)
+    p.add_argument("--no-measured", action="store_true",
+                   help="skip the ModelDecoder layer")
+    p.add_argument("--out", default=None, help="write BENCH rows as json")
+    p.add_argument("--trace", default=None,
+                   help="write a Chrome trace (Perfetto) of this run")
+    p.add_argument("--report", default=None, metavar="PREFIX",
+                   help="write PREFIX.md/.json mission report of this run")
     args = p.parse_args(argv)
-    d = pathlib.Path(args.dir) / args.mesh
+    with telemetry.trace_scope(args.trace):
+        rows, verdict = _main(args)
+        print("TELEMETRY " + json.dumps(telemetry.counters_snapshot()),
+              flush=True)
+        if args.report:
+            from repro.telemetry.report import write_report
 
-    print(f"{'arch':<22} {'cell':<12} {'ms/token':>9} {'tok/s/chip':>11} "
-          f"{'bound':<10} {'weights-floor ms':>16}")
-    for f in sorted(d.glob("*.json")):
-        r = recompute_terms(json.loads(f.read_text()))
-        if r["kind"] != "decode":
-            continue
-        rf = r["roofline"]
-        step = rf["bound_step_seconds"]
-        chips = r["chips"]
-        batch = {"decode_32k": 128, "long_500k": 1}[r["shape"]]
-        tok_s_chip = batch / step / chips
-        cfg = archs.get(r["arch"])
-        wbytes = cfg.param_count() * 2 / chips  # bf16 serving cast
-        floor_ms = wbytes / 819e9 * 1e3
-        print(f"{r['arch']:<22} {r['shape']:<12} {step*1e3:>9.2f} "
-              f"{tok_s_chip:>11.2f} {rf['dominant'].replace('_s',''):<10} "
-              f"{floor_ms:>16.3f}")
-    return 0
+            md, js = write_report(
+                args.report,
+                audit=verdict,
+                title="serving throughput bench",
+                extra={
+                    "bench": "serving_throughput",
+                    "n_rows": len(rows),
+                    "args": {"smoke": args.smoke, "full": args.full,
+                             "steps": args.steps},
+                },
+            )
+            print(f"wrote mission report to {md} and {js}")
+        if not verdict.ok:
+            raise SystemExit(
+                f"route-provenance audit failed: "
+                f"{len(verdict.violations)} violation(s)"
+            )
+    return rows
+
+
+def _main(args):
+    if args.smoke:
+        shells, gs_counts, rep_counts = QUICK_SHELLS, [1, 2], [2, 3]
+        n_requests, rate, max_new, batch = 12, 2.0, 4, 2
+    elif args.full:
+        shells, gs_counts, rep_counts = FULL_SHELLS, [1, 2, 4], [2, 4, 6]
+        n_requests, rate, max_new, batch = 48, 4.0, 8, 4
+    else:
+        shells, gs_counts, rep_counts = QUICK_SHELLS, [1, 2], [2, 4]
+        n_requests, rate, max_new, batch = 24, 2.0, 6, 2
+
+    rows, audits = transport_rows(
+        shells, gs_counts, rep_counts, steps=args.steps,
+        n_requests=n_requests, rate=rate, max_new=max_new, batch=batch,
+    )
+    hdr = (f"{'shell':>6} {'gs':>3} {'reps':>5} {'deliv':>7} {'slots':>6} "
+           f"{'p50':>6} {'p99':>6} {'ttft':>6} {'req/s':>9} {'audit':>6}")
+    print(hdr)
+    for r in rows:
+        print(
+            f"{r['planes']}x{r['per_plane']:<4} {r['n_gs']:>3} "
+            f"{r['n_replicas']:>5} "
+            f"{r['delivered']:>3}/{r['n_requests']:<3} {r['n_slots']:>6} "
+            f"{r.get('latency_p50_slots', -1):>6.1f} "
+            f"{r.get('latency_p99_slots', -1):>6.1f} "
+            f"{r.get('ttft_p50_slots', -1):>6.1f} "
+            f"{r.get('req_per_s', 0) * 1e3:>7.2f}m "
+            f"{'ok' if r['audit_violations'] == 0 else 'FAIL':>6}"
+        )
+        print("BENCH " + json.dumps(r), flush=True)
+
+    c_rows, c_audits = churn_rows(
+        steps=args.steps, n_requests=n_requests, rate=rate,
+        max_new=max_new, batch=batch,
+    )
+    rows += c_rows
+    audits += c_audits
+    c = c_rows[0]
+    print(
+        f"churn cell: replica dies mid-run — {c['delivered']}/"
+        f"{c['delivered'] + c['undelivered']} delivered, "
+        f"{c['retries']} retries, {c['lost_requests']:.0f} lost, "
+        f"audit {'ok' if c['audit_violations'] == 0 else 'FAIL'}"
+    )
+    for r in c_rows:
+        print("BENCH " + json.dumps(r), flush=True)
+
+    if not args.no_measured:
+        m_rows, m_audits = measured_rows(
+            steps=args.steps, n_requests=min(n_requests, 6),
+            max_new=max_new, batch=batch,
+        )
+        rows += m_rows
+        audits += m_audits
+        for r in m_rows:
+            print("BENCH " + json.dumps(r), flush=True)
+
+    verdict = merge_audits(audits)
+    print(
+        f"route-provenance audit: {verdict.n_windows} slots, "
+        f"{verdict.n_payloads} requests, {verdict.n_hops} hops, "
+        f"{len(verdict.violations)} violation(s)"
+    )
+
+    if args.out:
+        out_path = pathlib.Path(args.out)
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rows, indent=1))
+        print(f"wrote {len(rows)} rows to {out_path}")
+    return rows, verdict
 
 
 if __name__ == "__main__":

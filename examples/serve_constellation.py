@@ -1,8 +1,20 @@
-"""Serving example: batched inference with continuous request admission,
-plus a TDM twist — the server fleet periodically synchronizes adapter-style
-parameter deltas over a ring TDM schedule (model refresh without restart).
+"""Constellation serving example: TDM-slotted inference end to end.
+
+Requests arrive at two ground stations, climb earliest-delivery contact-
+graph routes to satellite model replicas, decode under the TDM slot
+structure (wave discipline per replica, continuous batching across the
+fleet), and return on downlink slots — the inference-side twin of the
+ground-segment FL pipeline, on the SAME sky: one
+:class:`~repro.constellation.scenario.ScenarioSpec` builds the geometry,
+contact plan, and slot schedule for both.
+
+Mid-run one replica satellite dies; its batch drains, in-flight requests
+re-route to the surviving replica, and the route-provenance auditor
+checks every hop it all took (slot-legal links, no lost requests).
 
 Run:  PYTHONPATH=src python examples/serve_constellation.py
+      (add --model for the real stacked-shard_map decoder on 8 forced
+       host devices; default is the deterministic NullDecoder)
 """
 
 import os
@@ -11,47 +23,100 @@ os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
 )
 
+import argparse
 
-import jax
-import numpy as np
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
+from repro import telemetry
+from repro.constellation.scenario import smoke_scenario
+from repro.serving import (
+    NullDecoder,
+    ReplicaFleet,
+    ServingEngine,
+    audit_serving_run,
+    synthesize_workload,
+)
 
-from repro.core import tdm
-from repro.core.schedule import ring
-from repro.launch import serve as serve_lib
+N_REQUESTS = 10
+BATCH = 2
+MAX_NEW = 6
 
 
 def main():
-    # --- batched serving ----------------------------------------------------
-    srv = serve_lib.main([
-        "--arch", "qwen3-moe-30b-a3b", "--smoke",
-        "--requests", "6", "--batch", "4", "--prompt-len", "8", "--max-new", "6",
-    ])
-    print("sample continuations:", {r.rid: r.out[:4] for r in
-                                    list(srv.queue) or []} or "(all served)")
+    p = argparse.ArgumentParser()
+    p.add_argument("--model", action="store_true",
+                   help="decode with the real stacked shard_map ModelDecoder")
+    p.add_argument("--requests", type=int, default=N_REQUESTS)
+    args = p.parse_args()
 
-    # --- fleet refresh over a ring TDM schedule -----------------------------
-    # 8 replicas hold slightly divergent "fine-tuned" deltas; three ring
-    # gossip slots propagate + average them (paper P2: composition of
-    # relations propagates data across the fleet).
-    n = 8
-    mesh = jax.make_mesh((n,), ("node",))
-    rel = ring(n)
-    deltas = np.random.default_rng(0).normal(size=(n, 256)).astype(np.float32)
+    # one scenario = the whole deployment: 6-sat MEO Walker shell + 2
+    # ground stations, TDM schedule from the propagated contact plan
+    scn = smoke_scenario()
+    replicas = [0, 3]            # one replica per orbital plane
+    print(
+        f"{scn.n_sats} satellites + {len(scn.ground_stations)} ground "
+        f"stations, {len(scn.slots())} TDM slots/epoch; replicas at "
+        f"{replicas}, gateways at {sorted(scn.ground_ids)}"
+    )
 
-    def refresh(x):
-        for _ in range(3):
-            x = tdm.gossip_avg(x, rel, "node", n)
-        return x
+    if args.model:
+        from repro.configs import archs
+        from repro.serving import ModelDecoder
 
-    f = jax.jit(shard_map(refresh, mesh=mesh, in_specs=P("node"),
-                          out_specs=P("node")))
-    out = np.asarray(f(deltas))
-    before = np.abs(deltas - deltas.mean(0)).max()
-    after = np.abs(out - out.mean(0)).max()
-    print(f"fleet delta disagreement: {before:.3f} -> {after:.3f} "
-          f"after 3 ring TDM slots")
+        cfg = archs.smoke_cfg(archs.get("gemma2-9b"))
+        decoder = ModelDecoder(cfg, len(replicas), BATCH, max_len=32)
+        print(f"decoder: {cfg.name} smoke config, one replica per device")
+    else:
+        decoder = NullDecoder(len(replicas), BATCH)
+        print("decoder: deterministic NullDecoder (pass --model for the "
+              "real thing)")
+
+    fleet = ReplicaFleet(replicas, BATCH, decoder)
+    eng = ServingEngine.from_scenario(scn, fleet)
+    workload = synthesize_workload(
+        args.requests, scn.ground_ids, rate_per_slot=1.0, max_new=MAX_NEW,
+    )
+
+    epoch = eng.epoch
+    fail_at, restore_at = epoch // 2, epoch // 2 + max(2, epoch // 4)
+
+    def on_slot(engine, slot):
+        if slot == fail_at:
+            print(f"  !! slot {slot}: replica satellite {replicas[0]} lost "
+                  "— draining its batch, re-routing")
+            engine.fail(replicas[0])
+        elif slot == restore_at:
+            print(f"  slot {slot}: satellite {replicas[0]} restored")
+            engine.restore(replicas[0])
+
+    report = eng.run(workload, on_slot=on_slot)
+    summ = report.summary()
+    print(
+        f"\ndelivered {summ['delivered']}/{summ['n_requests']} requests in "
+        f"{summ['n_slots']} slots ({summ['epochs']:.1f} epochs, "
+        f"{summ.get('wall_s', 0):.1f} simulated s): "
+        f"p50 latency {summ.get('latency_p50_slots', -1):.1f} slots, "
+        f"p99 {summ.get('latency_p99_slots', -1):.1f}, "
+        f"TTFT p50 {summ.get('ttft_p50_slots', -1):.1f}, "
+        f"{summ['retries']} retries"
+    )
+    for r in report.delivered[:3]:
+        print(f"  request {r.rid}: gateway {r.gateway} -> replica "
+              f"{r.replica}, {len(r.out)} tokens {r.out[:4]}..., "
+              f"{r.hops_up}+{r.hops_down} hops")
+
+    verdict = audit_serving_run(
+        report.records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=replicas,
+    )
+    print(
+        f"route-provenance audit: {verdict.n_hops} hops over "
+        f"{verdict.n_windows} slots — "
+        f"{'OK' if verdict.ok else f'{len(verdict.violations)} VIOLATIONS'}"
+    )
+    counters = telemetry.counters_snapshot()
+    for name in sorted(n for n in counters if n.startswith("serve.")):
+        print(f"  {name} = {counters[name]:g}")
+    if not verdict.ok or summ["undelivered"]:
+        raise SystemExit("serving run lost requests or failed its audit")
 
 
 if __name__ == "__main__":

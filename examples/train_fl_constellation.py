@@ -40,7 +40,8 @@ import jax
 import numpy as np
 
 from repro.configs import archs
-from repro.constellation import contact_plan, cost, orbits
+from repro.constellation import cost
+from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 from repro.data import pipeline
 from repro.launch import fl_train
 from repro.models.config import ShapeConfig
@@ -52,23 +53,21 @@ LOCAL_STEPS = 2
 PAYLOAD_BYTES = 1 << 22     # ~4 MiB of smoke-model params per exchange
 
 
-def setup(n_sats: int, ground_stations=(), rounds=ROUNDS):
+def setup(n_sats: int, n_ground: int = 0, rounds=ROUNDS):
     cfg = archs.smoke_cfg(archs.get("mamba2-780m"))
     opt_cfg = adamw.OptConfig(peak_lr=5e-3, warmup_steps=2, decay_steps=100)
     shape = ShapeConfig("fl", "train", 32, 4)   # per-node batch of 4 rows
 
-    # --- geometry: O3b-style MEO shell, visibility from orbital mechanics
-    geom = orbits.WalkerDelta(
-        total=n_sats, planes=2, altitude_km=8062.0, inclination_deg=60.0
-    )
-    plan = contact_plan.build_contact_plan(
-        geom,
-        duration_s=geom.period_s,
-        step_s=geom.period_s / max(rounds, 4),
+    # --- geometry: O3b-style MEO shell, visibility from orbital mechanics,
+    # packaged by the unified scenario factory (same sky as the serving
+    # example and the groundseg benchmarks)
+    scn = build_scenario(ScenarioSpec(
+        shells=(ShellSpec(planes=2, per_plane=n_sats // 2),),
+        n_ground=n_ground,
+        steps=max(rounds, 4),
         max_range_km=14_000.0,
-        ground_stations=ground_stations,
-    )
-    return cfg, opt_cfg, shape, geom, plan
+    ))
+    return cfg, opt_cfg, shape, scn
 
 
 def make_batch_fn(cfg, shape, n_nodes):
@@ -92,7 +91,8 @@ def make_batch_fn(cfg, shape, n_nodes):
 
 def main_tdm(rounds=ROUNDS):
     n_sats = 8
-    cfg, opt_cfg, shape, geom, plan = setup(n_sats, rounds=rounds)
+    cfg, opt_cfg, shape, scn = setup(n_sats, rounds=rounds)
+    geom, plan = scn.geom, scn.plan
     fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
     windows = plan.windows()
     est = cost.plan_cost(plan, PAYLOAD_BYTES, mode="getmeas")
@@ -119,24 +119,23 @@ def main_tdm(rounds=ROUNDS):
             alive.discard(3)
             print("  !! satellite 3 lost — rescheduling (skip-slot semantics)")
 
-    state, _ = fl_train.run_constellation_fl(
+    res = fl_train.run(fl_train.ConstellationRun(
         cfg, opt_cfg, mesh, n_sats, fl_cfg, plan, state,
         make_batch_fn(cfg, shape, n_sats),
         rounds=rounds, alive=alive, on_round=on_round,
-    )
-    print("done — surviving satellites converged together "
+    ))
+    state = res.state
+    print(f"done — {res.n_rounds} rounds, surviving satellites converged "
+          f"together "
           f"(consensus {fl_train.consensus_distance(state['params']):.4f})")
 
 
 def main_groundseg(rounds=ROUNDS, pipeline_depth=1, max_staleness=0):
     n_sats = 6
-    ground = [
-        orbits.GroundStation(0.0, 0.0, name="equator"),
-        orbits.GroundStation(45.0, 120.0, name="midlat"),
-    ]
-    cfg, opt_cfg, shape, geom, plan = setup(n_sats, ground, rounds=rounds)
-    n_nodes = plan.n_nodes
-    sinks = frozenset(range(n_sats, n_nodes))
+    cfg, opt_cfg, shape, scn = setup(n_sats, n_ground=2, rounds=rounds)
+    geom, plan, ground = scn.geom, scn.plan, scn.ground_stations
+    n_nodes = scn.n_nodes
+    sinks = scn.ground_ids
     fl_cfg = fl_train.FLConfig(mode="tdm", local_steps=LOCAL_STEPS)
     gs_cfg = fl_train.GroundSegConfig(
         mode="hierarchical", sink_sync_every=2,
@@ -179,12 +178,13 @@ def main_groundseg(rounds=ROUNDS, pipeline_depth=1, max_staleness=0):
             alive.discard(2)
             print("  !! satellite 2 lost — rerouting (skip-slot semantics)")
 
-    state, _ = fl_train.run_groundseg_fl(
+    res = fl_train.run(fl_train.GroundSegRun(
         cfg, opt_cfg, mesh, n_nodes, fl_cfg, gs_cfg, plan, state,
         make_batch_fn(cfg, shape, n_nodes),
         sinks=sinks, rounds=rounds, alive=alive, on_round=on_round,
         antennas=2, payload_bytes=PAYLOAD_BYTES,
-    )
+    ))
+    state = res.state
     survivors = [v for v in range(n_sats) if v in alive]
     sat_params = jax.tree.map(
         lambda x: np.asarray(x)[survivors], state["params"]

@@ -20,6 +20,10 @@ relation algebra (:mod:`repro.core.relation`) and its motivating deployment
   strategy portfolio (slow-first grouping, max-weight-matching peeling,
   slew-warm ordering) scored by the cost oracle, provably never worse than
   the greedy first-legal-coloring baseline.
+- :mod:`repro.constellation.scenario`     — the unified scenario factory:
+  ``build_scenario(ScenarioSpec)`` names a whole deployment (shells, ground
+  stations, link budget, horizon, seed) and is the single setup path shared
+  by examples, benchmarks, and the serving/training drivers.
 
 Pipeline, end to end::
 
@@ -29,6 +33,34 @@ Pipeline, end to end::
     est = cost.schedule_cost(sched, payload_bytes=1 << 20, mode="getmeas")
 """
 
-from repro.constellation import contact_plan, cost, links, optimizer, orbits
+from repro.constellation import (
+    contact_plan,
+    cost,
+    links,
+    optimizer,
+    orbits,
+    scenario,
+)
+from repro.constellation.scenario import (
+    GROUND_SITES,
+    Scenario,
+    ScenarioSpec,
+    ShellSpec,
+    build_scenario,
+    smoke_scenario,
+)
 
-__all__ = ["contact_plan", "cost", "links", "optimizer", "orbits"]
+__all__ = [
+    "GROUND_SITES",
+    "Scenario",
+    "ScenarioSpec",
+    "ShellSpec",
+    "build_scenario",
+    "contact_plan",
+    "cost",
+    "links",
+    "optimizer",
+    "orbits",
+    "scenario",
+    "smoke_scenario",
+]

@@ -598,27 +598,3 @@ def build_contact_plan(
     )
 
 
-# ---------------------------------------------------------------------------
-# Legacy toy model (duty-cycled +grid) — kept only for the deprecated
-# repro.core.schedule.WalkerConstellation shim.
-# ---------------------------------------------------------------------------
-
-def legacy_duty_cycle_relation(
-    geom: WalkerDelta, t_slot: int, cross_plane_duty: int = 4
-) -> Relation:
-    """The pre-subsystem invented topology: permanent intra-plane ring plus
-    duty-cycled, phasing-shifted cross-plane edges. Not geometry — prefer
-    :func:`build_contact_plan`."""
-    edges: List[Tuple[int, int]] = []
-    s = geom.per_plane
-    for p in range(geom.planes):
-        for k in range(s):
-            edges.append((geom.node_id(p, k), geom.node_id(p, k + 1)))
-    for p in range(geom.planes - 1):
-        if (t_slot + p) % cross_plane_duty == 0:
-            continue  # cross-plane link outage window
-        shift = (geom.phasing * (t_slot % s)) % s
-        for k in range(s):
-            edges.append((geom.node_id(p, k), geom.node_id(p + 1, (k + shift) % s)))
-    dedup = {(min(a, b), max(a, b)) for a, b in edges if a != b}
-    return Relation.from_edges(sorted(dedup), nodes=range(geom.total))

@@ -17,8 +17,10 @@ budgets by splitting R across slots (``antenna_constrained``).
 
 Time-varying visibility relations for real constellations are produced by
 the :mod:`repro.constellation` subsystem (orbital propagation, Earth
-occlusion, link budgets); the ``WalkerConstellation`` class kept here is a
-deprecated duty-cycle toy shimmed over that package.
+occlusion, link budgets) — start from
+``repro.constellation.scenario.build_scenario``. The old
+``WalkerConstellation`` duty-cycle toy was removed (module ``__getattr__``
+below raises a hard ImportError with the migration hint).
 """
 
 from __future__ import annotations
@@ -384,63 +386,17 @@ def antenna_constrained(
 
 
 # --------------------------------------------------------------------------
-# Walker-delta constellation visibility — DEPRECATED shim
+# Walker-delta constellation visibility — REMOVED (was a deprecated shim)
 # --------------------------------------------------------------------------
 
-@dataclass(frozen=True)
-class WalkerConstellation:
-    """DEPRECATED duty-cycle toy: use :mod:`repro.constellation` instead.
-
-    Thin shim over the constellation subsystem, kept so existing callers of
-    the invented duty-cycled +grid topology keep working. Real geometry —
-    orbital propagation, Earth occlusion, link budgets, contact windows —
-    lives in ``repro.constellation`` (``build_contact_plan`` et al.).
-    """
-
-    total: int = 24
-    planes: int = 4
-    phasing: int = 1
-    inclination_deg: float = 53.0
-    altitude_km: float = 550.0
-
-    def _geom(self):
-        from repro.constellation.orbits import WalkerDelta
-
-        return WalkerDelta(
-            total=self.total,
-            planes=self.planes,
-            phasing=self.phasing,
-            inclination_deg=self.inclination_deg,
-            altitude_km=self.altitude_km,
+def __getattr__(name: str):
+    if name == "WalkerConstellation":
+        raise ImportError(
+            "WalkerConstellation (the duty-cycle toy) was removed: build a "
+            "geometry-driven schedule via repro.constellation.scenario."
+            "build_scenario(ScenarioSpec(...)).slots() instead."
         )
-
-    @property
-    def per_plane(self) -> int:
-        if self.total % self.planes:
-            raise ValueError("total must divide planes")
-        return self.total // self.planes
-
-    def node_id(self, plane: int, slot: int) -> int:
-        return self._geom().node_id(plane, slot)
-
-    def visibility(self, t_slot: int, cross_plane_duty: int = 4) -> Relation:
-        """Duty-cycled +grid relation (invented outages, not geometry)."""
-        import warnings
-
-        from repro.constellation.contact_plan import legacy_duty_cycle_relation
-
-        warnings.warn(
-            "WalkerConstellation is a deprecated toy; build geometry-driven "
-            "plans with repro.constellation.contact_plan.build_contact_plan",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return legacy_duty_cycle_relation(self._geom(), t_slot, cross_plane_duty)
-
-    def schedule(self, n_slots: int, cross_plane_duty: int = 4) -> TDMSchedule:
-        return TDMSchedule(
-            tuple(self.visibility(t, cross_plane_duty) for t in range(n_slots))
-        )
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 # --------------------------------------------------------------------------

@@ -17,6 +17,12 @@ simulated — this container has one CPU):
    slot deadline is treated as ``odata=None`` (participate=False masks its
    payload in tdm.get_meas); gradient accumulation (cfg.micro_steps)
    smooths per-step jitter.
+5. **Elastic replica membership** — the serving twin of (3):
+   ``ReplicaMembership`` tracks which model-replica satellites are in
+   service under orbital churn. A replica losing visibility is *drained*
+   (the serving engine abandons its batch and re-routes the requests);
+   one regaining visibility is re-admitted after ``grace_slots`` of
+   continuous visibility.
 """
 
 from __future__ import annotations
@@ -75,6 +81,61 @@ class SlotDeadline:
 
     def participate(self, node_progress: np.ndarray, slot_step: int) -> np.ndarray:
         return node_progress >= slot_step - self.deadline_steps
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipDelta:
+    """One membership update: replicas drained / (re-)admitted this step."""
+
+    drained: frozenset
+    admitted: frozenset
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.drained or self.admitted)
+
+
+class ReplicaMembership:
+    """Elastic replica membership under orbital churn.
+
+    ``update(visible)`` moves replicas between in-service and drained based
+    on the visibility set the caller computes (alive + reachable on the
+    contact graph). Draining is immediate — a replica that cannot uplink
+    or downlink must abandon its batch *now* so requests re-route; re-
+    admission waits for ``grace_slots`` consecutive visible updates, which
+    damps flapping at a contact-window edge (a replica seen for a single
+    step of a grazing pass is not worth re-prefetching a wave onto).
+    """
+
+    def __init__(self, replicas: Iterable[int], grace_slots: int = 0):
+        self.replicas = frozenset(int(r) for r in replicas)
+        self.grace_slots = int(grace_slots)
+        self._active: Set[int] = set(self.replicas)
+        self._streak: Dict[int, int] = {r: 0 for r in self.replicas}
+
+    @property
+    def active(self) -> frozenset:
+        """Replicas currently in service (admission-eligible)."""
+        return frozenset(self._active)
+
+    @property
+    def drained(self) -> frozenset:
+        return self.replicas - self.active
+
+    def update(self, visible: Iterable[int]) -> MembershipDelta:
+        vis = set(visible) & self.replicas
+        drained = frozenset(self._active - vis)
+        self._active -= drained
+        admitted: Set[int] = set()
+        for r in self.replicas:
+            if r in vis:
+                self._streak[r] += 1
+                if r not in self._active and self._streak[r] > self.grace_slots:
+                    admitted.add(r)
+            else:
+                self._streak[r] = 0
+        self._active |= admitted
+        return MembershipDelta(drained=drained, admitted=frozenset(admitted))
 
 
 def restore_for_mesh(

@@ -1073,3 +1073,129 @@ def consensus_distance(stacked_params) -> float:
         num += float(np.square(arr - mean).sum())
         den += float(np.square(mean).sum() * arr.shape[0])
     return (num / max(den, 1e-30)) ** 0.5
+
+
+# ---------------------------------------------------------------------------
+# One driver entry point (ISSUE 10): run(cfg) dispatches on config type
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TDMRun:
+    """Config for :func:`run_tdm_rounds` — one FL round per slot relation."""
+
+    cache: RoundFnCache
+    state: Any
+    relations: Sequence[Relation]
+    batch_fn: Callable[[int], Any]
+    alive: Optional[set] = None
+    on_round: Optional[Callable[[RoundLog], None]] = None
+    log_every: int = 1
+
+
+@dataclasses.dataclass
+class ConstellationRun:
+    """Config for :func:`run_constellation_fl` — geometry-driven rounds."""
+
+    cfg: ModelConfig
+    opt_cfg: Any
+    mesh: Mesh
+    n_nodes: int
+    fl_cfg: FLConfig
+    plan: Any
+    state: Any
+    batch_fn: Callable[[int], Any]
+    rounds: Optional[int] = None
+    alive: Optional[set] = None
+    on_round: Optional[Callable[[RoundLog], None]] = None
+    optimize: Optional[str] = None
+    antennas: Any = None
+    payload_bytes: int = 1 << 20
+    acquisition_s: float = 0.0
+    log_every: int = 1
+
+
+@dataclasses.dataclass
+class GroundSegRun:
+    """Config for :func:`run_groundseg_fl` — ground stations as sinks."""
+
+    cfg: ModelConfig
+    opt_cfg: Any
+    mesh: Mesh
+    n_nodes: int
+    fl_cfg: FLConfig
+    gs_cfg: GroundSegConfig
+    plan: Any
+    state: Any
+    batch_fn: Callable[[int], Any]
+    sinks: Any = ()
+    rounds: int = 1
+    alive: Optional[set] = None
+    on_round: Optional[Callable[[GroundSegRoundLog], None]] = None
+    optimize: Optional[str] = None
+    antennas: Any = None
+    payload_bytes: int = 1 << 20
+    acquisition_s: float = 0.0
+    log_every: int = 1
+
+
+@dataclasses.dataclass
+class RunResult:
+    """Shared return shape of :func:`run`: mode tag + final state + logs."""
+
+    mode: str                    # "tdm" | "constellation" | "groundseg"
+    state: Any
+    logs: List[Any]
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.logs)
+
+    @property
+    def final(self) -> Any:
+        """Last round's log (None for a zero-round run)."""
+        return self.logs[-1] if self.logs else None
+
+
+def run(run_cfg) -> RunResult:
+    """One driver entry point over the three FL modes.
+
+    Dispatches on the config dataclass type — :class:`TDMRun` →
+    :func:`run_tdm_rounds`, :class:`ConstellationRun` →
+    :func:`run_constellation_fl`, :class:`GroundSegRun` →
+    :func:`run_groundseg_fl` — and normalizes the ``(state, logs)`` returns
+    into one :class:`RunResult`. The underlying functions are unchanged
+    (and remain directly callable); this is pure plumbing so examples and
+    higher drivers can switch modes by swapping a config object.
+    """
+    if isinstance(run_cfg, TDMRun):
+        state, logs = run_tdm_rounds(
+            run_cfg.cache, run_cfg.state, run_cfg.relations, run_cfg.batch_fn,
+            alive=run_cfg.alive, on_round=run_cfg.on_round,
+            log_every=run_cfg.log_every,
+        )
+        return RunResult("tdm", state, logs)
+    if isinstance(run_cfg, ConstellationRun):
+        state, logs = run_constellation_fl(
+            run_cfg.cfg, run_cfg.opt_cfg, run_cfg.mesh, run_cfg.n_nodes,
+            run_cfg.fl_cfg, run_cfg.plan, run_cfg.state, run_cfg.batch_fn,
+            rounds=run_cfg.rounds, alive=run_cfg.alive,
+            on_round=run_cfg.on_round, optimize=run_cfg.optimize,
+            antennas=run_cfg.antennas, payload_bytes=run_cfg.payload_bytes,
+            acquisition_s=run_cfg.acquisition_s, log_every=run_cfg.log_every,
+        )
+        return RunResult("constellation", state, logs)
+    if isinstance(run_cfg, GroundSegRun):
+        state, logs = run_groundseg_fl(
+            run_cfg.cfg, run_cfg.opt_cfg, run_cfg.mesh, run_cfg.n_nodes,
+            run_cfg.fl_cfg, run_cfg.gs_cfg, run_cfg.plan, run_cfg.state,
+            run_cfg.batch_fn, run_cfg.sinks, run_cfg.rounds,
+            alive=run_cfg.alive, on_round=run_cfg.on_round,
+            optimize=run_cfg.optimize, antennas=run_cfg.antennas,
+            payload_bytes=run_cfg.payload_bytes,
+            acquisition_s=run_cfg.acquisition_s, log_every=run_cfg.log_every,
+        )
+        return RunResult("groundseg", state, logs)
+    raise TypeError(
+        f"run() takes a TDMRun / ConstellationRun / GroundSegRun config, "
+        f"got {type(run_cfg).__name__}"
+    )

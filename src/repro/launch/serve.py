@@ -1,5 +1,13 @@
-"""Serving driver: batched prefill + decode loop with a continuous-batching
-style slot manager (requests join/leave the batch between steps).
+"""Single-host serving driver: one model replica behind the fleet scheduler.
+
+Since ISSUE 10 the actual scheduling logic lives in
+:mod:`repro.serving.replica` — :class:`BatchedServer` here is the
+degenerate fleet (one satellite, one replica, no contact graph): the same
+wave admission, per-replica decode cache, and continuous-batching
+semantics, so the local CLI path and the constellation engine
+(:mod:`repro.serving.engine`) exercise identical code. For requests that
+arrive at ground stations and route over inter-satellite links, use
+``ServingEngine`` / ``examples/serve_constellation.py``.
 
 CPU demo:
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --smoke \
@@ -13,16 +21,18 @@ import dataclasses
 import time
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import archs
-from repro.models import registry
+from repro.serving.replica import ModelDecoder, ReplicaFleet
 
 
 @dataclasses.dataclass
 class Request:
+    """A local request: duck-compatible with the fleet's lane protocol
+    (``prompt`` / ``out`` / ``done``), minus the ground-segment lifecycle
+    fields of :class:`repro.serving.requests.InferenceRequest`."""
+
     rid: int
     prompt: np.ndarray
     max_new: int
@@ -34,63 +44,48 @@ class Request:
 
 
 class BatchedServer:
-    """Fixed-width decode batch; free slots are refilled from the queue
-    after each prefill (padded prompts share one prefill shape bucket)."""
+    """Fixed-width decode batch; free lanes refill from the queue whenever
+    the replica goes idle (wave discipline — the decode cache keeps one
+    scalar position per replica, so waves prefill together)."""
+
+    _SAT = 0   # the single pseudo-satellite id
 
     def __init__(self, cfg, batch: int, max_len: int, seed: int = 0):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
-        self.bundle = registry.bundle(cfg)
-        self.params, _ = self.bundle.init(jax.random.PRNGKey(seed))
-        self._decode = jax.jit(self.bundle.decode_fn)
-        self._prefill = jax.jit(
-            lambda p, b: self.bundle.prefill_fn(p, b, max_len)
+        self.fleet = ReplicaFleet(
+            [self._SAT],
+            batch,
+            ModelDecoder(cfg, 1, batch, max_len, seed=seed),
         )
-        self.queue: List[Request] = []
-        self.active: Dict[int, Request] = {}
-        self.cache = None
         self.steps = 0
 
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
+    # Contract kept for tests/callers of the pre-fleet server: ``queue`` is
+    # the waiting list, ``active`` the occupied decode lanes.
+    @property
+    def queue(self) -> List[Request]:
+        return list(self.fleet.queues[self._SAT])
 
-    def _admit(self) -> None:
-        """Admit up to `batch` queued requests as one padded prefill."""
-        if not self.queue or self.active:
-            return
-        admitted = self.queue[: self.batch]
-        self.queue = self.queue[self.batch :]
-        plen = max(len(r.prompt) for r in admitted)
-        toks = np.zeros((self.batch, plen), np.int32)
-        for i, r in enumerate(admitted):
-            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
-            self.active[i] = r
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
-        self.cache = cache
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        for i, r in self.active.items():
-            r.out.append(int(nxt[i]))
-        self._last = nxt
+    @property
+    def active(self) -> Dict[int, Request]:
+        return {
+            lane: r
+            for lane, r in enumerate(self.fleet.lanes[self._SAT])
+            if r is not None
+        }
+
+    def submit(self, req: Request) -> None:
+        self.fleet.enqueue(self._SAT, req)
 
     def step(self) -> bool:
-        """One decode step for the active batch. Returns False when idle."""
-        self._admit()
-        if not self.active:
-            return False
-        tok = jnp.asarray(self._last[:, None])
-        logits, self.cache = self._decode(self.params, self.cache, {"token": tok})
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
-        self._last = nxt
-        self.steps += 1
-        finished = [i for i, r in self.active.items() if r.done]
-        for i, r in list(self.active.items()):
-            if not r.done:
-                r.out.append(int(nxt[i]))
-        if len(finished) == len(self.active) and finished:
-            self.active.clear()
-            self.cache = None
-        return bool(self.active) or bool(self.queue)
+        """Admit if idle, then one decode step. False when fully drained."""
+        self.fleet.admit({self._SAT})
+        if self.fleet.tick():
+            pass  # finished requests already carry their full output
+        if self.fleet.busy(self._SAT):
+            self.steps += 1
+        return self.fleet.busy(self._SAT) or bool(self.fleet.queues[self._SAT])
 
 
 def main(argv=None):

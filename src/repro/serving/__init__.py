@@ -1,0 +1,62 @@
+"""Constellation-scale serving: TDM-slotted inference over the ground segment.
+
+The inference-side twin of :mod:`repro.groundseg` (ISSUE 10): user
+requests arrive at ground stations, ride the earliest-delivery contact-
+graph routes up to satellites holding model replicas, decode there under
+the TDM slot structure with fleet-level continuous batching, and the
+responses descend to their origin gateways — with elastic replica
+membership under orbital churn and full flight-recorder instrumentation.
+
+- :mod:`repro.serving.requests` — the request lifecycle model
+  (queued → uplink → routed → decoding → downlink → delivered) and
+  deterministic workload synthesis.
+- :mod:`repro.serving.replica`  — per-satellite decode state: the
+  :class:`ReplicaFleet` continuous-batching scheduler over either a pure-
+  host :class:`NullDecoder` (transport logic, fast tests, deterministic
+  benchmark layer) or the stacked shard_map :class:`ModelDecoder` (one
+  model replica per device).
+- :mod:`repro.serving.engine`   — the slot loop: transport, admission,
+  decode, churn handling, per-slot provenance records, telemetry.
+- :mod:`repro.serving.audit`    — replay the provenance against the TDM
+  schedule (slot-legal links only, contiguous trails, every request
+  delivered exactly once) into a :class:`repro.telemetry.AuditReport`.
+
+Quick use::
+
+    from repro.constellation.scenario import smoke_scenario
+    from repro import serving
+
+    scn = smoke_scenario()
+    fleet = serving.ReplicaFleet([0, 3], batch=2,
+                                 decoder=serving.NullDecoder(2, 2))
+    eng = serving.ServingEngine.from_scenario(scn, fleet)
+    work = serving.synthesize_workload(8, scn.ground_ids, seed=0)
+    report = eng.run(work)
+    verdict = serving.audit_serving_run(
+        report.records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=sorted(eng.replicas))
+    assert verdict.ok and not report.undelivered
+"""
+
+from repro.serving.audit import audit_serving_run
+from repro.serving.engine import (
+    Send,
+    ServeReport,
+    ServingEngine,
+    SlotRecord,
+)
+from repro.serving.replica import ModelDecoder, NullDecoder, ReplicaFleet
+from repro.serving.requests import InferenceRequest, synthesize_workload
+
+__all__ = [
+    "InferenceRequest",
+    "ModelDecoder",
+    "NullDecoder",
+    "ReplicaFleet",
+    "Send",
+    "ServeReport",
+    "ServingEngine",
+    "SlotRecord",
+    "audit_serving_run",
+    "synthesize_workload",
+]

@@ -261,13 +261,16 @@ def test_topk_error_feedback_on_deltas():
 # 8. TDM-FLA on a Walker constellation converges to consensus
 # ---------------------------------------------------------------------------
 def test_walker_tdm_fla():
-    from repro.constellation.contact_plan import legacy_duty_cycle_relation
-    from repro.constellation.orbits import WalkerDelta
+    from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 
-    geom = WalkerDelta(total=N, planes=2)
-    sched = TDMSchedule(
-        tuple(legacy_duty_cycle_relation(geom, t) for t in range(10))
+    scn = build_scenario(
+        ScenarioSpec(
+            shells=(ShellSpec(planes=2, per_plane=N // 2),),
+            n_ground=0,
+            steps=10,
+        )
     )
+    sched = TDMSchedule(tuple(scn.relations()))
     x0 = np.random.default_rng(23).normal(size=(N, 6)).astype(np.float32)
 
     def run(x):

@@ -7,7 +7,6 @@ valid exchange relation respecting a per-node antenna budget.
 """
 
 import math
-import warnings
 
 import numpy as np
 import pytest
@@ -23,7 +22,7 @@ from repro.constellation.orbits import (
     sample_times,
 )
 from repro.core.relation import Relation
-from repro.core.schedule import TDMSchedule, WalkerConstellation
+from repro.core.schedule import TDMSchedule
 
 
 GEOM_4x5 = WalkerDelta(total=20, planes=4, phasing=1, altitude_km=1400.0)
@@ -391,13 +390,11 @@ def test_fl_round_cost_adds_compute():
 
 
 # ------------------------------------------------- legacy shim (schedule.py)
-def test_walker_shim_delegates_and_warns():
-    shim = WalkerConstellation(total=24, planes=4)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        rel = shim.visibility(3)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    geom = WalkerDelta(total=24, planes=4, phasing=1)
-    assert rel.pairs == contact_plan.legacy_duty_cycle_relation(geom, 3).pairs
-    assert shim.node_id(2, 7) == geom.node_id(2, 7)
-    assert shim.per_plane == geom.per_plane
+def test_walker_shim_and_legacy_model_removed():
+    """ISSUE 10: the duty-cycle toy and its contact_plan backing are gone —
+    hard ImportError with a migration hint, no silent fallback."""
+    import repro.core.schedule as schedule_mod
+
+    with pytest.raises(ImportError, match="scenario"):
+        schedule_mod.WalkerConstellation
+    assert not hasattr(contact_plan, "legacy_duty_cycle_relation")

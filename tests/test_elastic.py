@@ -1,6 +1,7 @@
 """Fault-tolerance unit tests: heartbeat tracking, slot-deadline straggler
-policy, TDM rescheduling, and elastic reshard-on-restore across DIFFERENT
-mesh shapes (the new job's mesh != the mesh that saved)."""
+policy, TDM rescheduling, elastic replica membership under orbital churn,
+and elastic reshard-on-restore across DIFFERENT mesh shapes (the new job's
+mesh != the mesh that saved)."""
 
 import numpy as np
 
@@ -9,7 +10,12 @@ import jax.numpy as jnp
 
 from repro.checkpoint import checkpoint as ckpt_lib
 from repro.core.schedule import round_robin_tournament
-from repro.launch.elastic import HealthTracker, SlotDeadline, reschedule
+from repro.launch.elastic import (
+    HealthTracker,
+    ReplicaMembership,
+    SlotDeadline,
+    reschedule,
+)
 
 
 def test_health_tracker_deadlines():
@@ -40,6 +46,47 @@ def test_reschedule_preserves_validity():
         for (i, j) in slot.pairs:
             if i in surv[t].nodes and j in surv[t].nodes:
                 assert (i, j) in surv[t]
+
+
+def test_membership_drain_is_immediate():
+    m = ReplicaMembership([0, 3, 5])
+    assert m.active == frozenset({0, 3, 5})
+    delta = m.update({0, 5})              # 3 lost visibility
+    assert delta.drained == frozenset({3})
+    assert delta.changed
+    assert m.active == frozenset({0, 5})
+    assert m.drained == frozenset({3})
+    # steady state: no churn, no delta
+    assert not m.update({0, 5}).changed
+
+
+def test_membership_readmit_without_grace():
+    m = ReplicaMembership([0, 3], grace_slots=0)
+    m.update({0})
+    delta = m.update({0, 3})              # back for one step: re-admitted
+    assert delta.admitted == frozenset({3})
+    assert m.active == frozenset({0, 3})
+
+
+def test_membership_grace_damps_flapping():
+    m = ReplicaMembership([0, 3], grace_slots=2)
+    m.update({0})
+    # a grazing pass: visible for one step, gone again — never re-admitted
+    assert not m.update({0, 3}).admitted
+    assert not m.update({0}).changed       # streak resets
+    # a real return: visible for grace_slots+1 consecutive updates
+    assert not m.update({0, 3}).admitted
+    assert not m.update({0, 3}).admitted
+    delta = m.update({0, 3})
+    assert delta.admitted == frozenset({3})
+    assert m.active == frozenset({0, 3})
+
+
+def test_membership_ignores_foreign_nodes():
+    m = ReplicaMembership([0, 3])
+    delta = m.update({0, 3, 99})          # 99 is not a replica
+    assert not delta.changed
+    assert m.active == frozenset({0, 3})
 
 
 def test_elastic_restore_reshards_for_new_mesh(tmp_path):

@@ -4,13 +4,28 @@ FL convergence: centralized == decentralized == TDM consensus on averaging."""
 import numpy as np
 import pytest
 
+import functools
+
 from repro.core import fl
 from repro.core.gossip import metropolis_weights, spectral_gap
 from repro.core.relation import Relation
-from repro.constellation.contact_plan import legacy_duty_cycle_relation
-from repro.constellation.orbits import WalkerDelta
+from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 from repro.core.schedule import TDMSchedule, hypercube_schedule
 from proptest import given, st_int
+
+
+@functools.lru_cache(maxsize=1)
+def _walker_schedule(n_sats: int = 12, planes: int = 3, steps: int = 60):
+    """Geometry-driven visibility schedule (replaces the removed duty-cycle
+    toy): one MEO Walker shell, no ground segment, one period horizon."""
+    scn = build_scenario(
+        ScenarioSpec(
+            shells=(ShellSpec(planes=planes, per_plane=n_sats // planes),),
+            n_ground=0,
+            steps=steps,
+        )
+    )
+    return TDMSchedule(tuple(scn.relations()))
 
 
 def test_centralized_fla_fedavg():
@@ -69,10 +84,7 @@ def test_decentralized_fla_uniform_average(n, seed):
 def test_tdm_fla_consensus_over_walker(seed):
     """The paper's FLA over a time-varying Walker visibility schedule:
     Metropolis mixing reaches consensus on the constellation average."""
-    geom = WalkerDelta(total=12, planes=3)
-    sched = TDMSchedule(
-        tuple(legacy_duty_cycle_relation(geom, t) for t in range(60))
-    )
+    sched = _walker_schedule()
     n = 12
     init = {i: np.array([float(i), -float(i)]) for i in range(n)}
 

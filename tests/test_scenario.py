@@ -1,0 +1,93 @@
+"""Unified scenario factory: spec validation, canonical ground sites,
+node layout, schedule caching, and sweep helpers."""
+
+import dataclasses
+import functools
+
+import pytest
+
+from repro.constellation.orbits import GroundStation, MultiShell, WalkerDelta
+from repro.constellation.scenario import (
+    GROUND_SITES,
+    ScenarioSpec,
+    ShellSpec,
+    build_scenario,
+    replace_spec,
+    smoke_scenario,
+)
+
+
+@functools.lru_cache(maxsize=1)
+def _smoke():
+    return smoke_scenario()
+
+
+def test_spec_defaults_and_sites_prefix():
+    spec = ScenarioSpec()
+    assert spec.n_sats == 6
+    assert spec.sites == GROUND_SITES[:2]
+    assert spec.sites[0].name == "equator"
+    # explicit ground stations override the canonical prefix
+    gs = (GroundStation(10.0, 20.0, name="custom"),)
+    assert ScenarioSpec(ground_stations=gs).sites == gs
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="at least one shell"):
+        ScenarioSpec(shells=())
+    with pytest.raises(ValueError, match="n_ground"):
+        ScenarioSpec(n_ground=len(GROUND_SITES) + 1)
+    # n_ground beyond the canonical list is fine with explicit stations
+    gs = tuple(
+        GroundStation(float(i), 0.0, name=f"g{i}") for i in range(6)
+    )
+    assert len(ScenarioSpec(n_ground=6, ground_stations=gs).sites) == 6
+
+
+def test_spec_geometry_single_vs_multi_shell():
+    single = ScenarioSpec(shells=(ShellSpec(planes=3, per_plane=4),))
+    assert isinstance(single.geometry(), WalkerDelta)
+    assert single.n_sats == 12
+    multi = ScenarioSpec(shells=(
+        ShellSpec(planes=2, per_plane=3, altitude_km=8062.0),
+        ShellSpec(planes=2, per_plane=2, altitude_km=10_000.0),
+    ))
+    assert isinstance(multi.geometry(), MultiShell)
+    assert multi.n_sats == 10
+    # defaults derive from the shells: one-period horizon of the FIRST
+    # shell, diameter range bound of the HIGHEST shell
+    assert multi.horizon_s() == pytest.approx(
+        multi.shells[0].walker().period_s
+    )
+    assert multi.range_km() > 2 * 10_000.0
+
+
+def test_build_scenario_node_layout():
+    scn = _smoke()
+    assert scn.n_sats == 6
+    assert scn.n_nodes == 8               # satellites first, then ground
+    assert scn.ground_ids == frozenset({6, 7})
+    assert sorted(scn.sat_ids) == list(range(6))
+    rels = scn.relations()
+    assert len(rels) == scn.spec.steps
+    assert scn.describe()["n_sats"] == 6
+
+
+def test_schedule_cached_and_overridable():
+    scn = _smoke()
+    assert scn.schedule() is scn.schedule()       # memoized
+    over = scn.schedule(antennas=1)
+    assert over is not scn.schedule()
+    assert len(scn.slots()) > 0
+    # every slot relation is a valid TDM exchange on the node universe
+    for rel in scn.slots():
+        assert rel.is_valid_exchange() or len(rel) == 0
+
+
+def test_replace_spec_sweep_helper():
+    scn = _smoke()
+    bigger = replace_spec(scn, n_ground=3)
+    assert bigger.n_nodes == scn.n_nodes + 1
+    assert bigger.spec == dataclasses.replace(scn.spec, n_ground=3)
+    # original untouched
+    assert scn.n_nodes == 8

@@ -1,5 +1,5 @@
 """Tests for TDM schedules: round-robin, edge coloring, antenna budgets,
-Walker constellations, hypercube gossip."""
+geometry-driven propagation, hypercube gossip."""
 
 
 import pytest
@@ -7,7 +7,6 @@ import pytest
 from repro.core.relation import Relation
 from repro.core.schedule import (
     TDMSchedule,
-    WalkerConstellation,
     antenna_constrained,
     clique_multilink,
     edge_coloring,
@@ -200,37 +199,30 @@ def test_heterogeneous_antennas():
 
 
 # -------------------------------------------------------------- walker
-# (the shim is deprecated by design; these tests exercise it deliberately)
-pytestmark_walker = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_walker_shim_removed():
+    """The duty-cycle toy is gone: importing it fails hard, with a pointer
+    at the scenario factory (geometry-driven schedules)."""
+    import repro.core.schedule as schedule_mod
+
+    with pytest.raises(ImportError, match="build_scenario"):
+        schedule_mod.WalkerConstellation
+    with pytest.raises(AttributeError):
+        schedule_mod.some_other_missing_name
 
 
-@pytestmark_walker
-def test_walker_visibility_valid_and_connected():
-    c = WalkerConstellation(total=24, planes=4)
-    for t in range(12):
-        rel = c.visibility(t)
-        assert rel.is_valid_exchange()
-        # intra-plane ring edges are permanent
-        for p in range(c.planes):
-            for k in range(c.per_plane):
-                assert (c.node_id(p, k), c.node_id(p, k + 1)) in rel
+def test_geometry_schedule_fully_propagates():
+    """Over enough slots of a real geometry-driven schedule, every
+    satellite's data reaches the whole constellation (paper P2 composed
+    across slots) — the property the removed toy used to cover."""
+    from repro.constellation.scenario import ScenarioSpec, ShellSpec, build_scenario
 
-
-@pytestmark_walker
-def test_walker_schedule_fully_propagates():
-    """Over enough slots, every satellite's data reaches the whole
-    constellation (paper P2 composed across slots)."""
-    c = WalkerConstellation(total=24, planes=4)
-    t = slots_to_full_propagation(lambda t: c.visibility(t), c.total)
+    scn = build_scenario(
+        ScenarioSpec(shells=(ShellSpec(planes=4, per_plane=6),), n_ground=0,
+                     steps=24)
+    )
+    rels = scn.relations()
+    t = slots_to_full_propagation(lambda t: rels[t % len(rels)], scn.n_sats)
     assert 0 < t <= 24
-
-
-@pytestmark_walker
-def test_walker_cross_plane_duty_cycle():
-    c = WalkerConstellation(total=24, planes=4)
-    r0 = c.visibility(0, cross_plane_duty=4)
-    r1 = c.visibility(1, cross_plane_duty=4)
-    assert r0.pairs != r1.pairs  # time-varying topology
 
 
 # ------------------------------------------------------ ring / hypercube

@@ -1,0 +1,291 @@
+"""Serving subsystem: workload synthesis, decoders, fleet admission,
+engine transport/churn semantics, and the route-provenance auditor.
+
+Everything here drives the deterministic :class:`NullDecoder` (pure host);
+the real stacked-shard_map :class:`ModelDecoder` end-to-end run lives in
+``_serving_worker.py`` (8 forced host devices, subprocess, slow tier).
+"""
+
+import dataclasses
+import functools
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.constellation.scenario import smoke_scenario
+from repro.serving import (
+    InferenceRequest,
+    NullDecoder,
+    ReplicaFleet,
+    Send,
+    ServingEngine,
+    audit_serving_run,
+    synthesize_workload,
+)
+from repro.serving import requests as rq
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@functools.lru_cache(maxsize=1)
+def _smoke():
+    return smoke_scenario()
+
+
+def _engine(replicas=(0, 3), batch=2, **kw):
+    scn = _smoke()
+    fleet = ReplicaFleet(list(replicas), batch, NullDecoder(len(replicas), batch))
+    return ServingEngine.from_scenario(scn, fleet, **kw), scn
+
+
+# ------------------------------------------------------------------ workload
+def test_workload_deterministic_arrivals():
+    a = synthesize_workload(10, [6, 7], rate_per_slot=2.0, seed=3)
+    b = synthesize_workload(10, [6, 7], rate_per_slot=2.0, seed=3)
+    for ra, rb in zip(a, b):
+        assert ra.gateway == rb.gateway
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    # arrivals advance at exactly rate_per_slot requests per slot
+    assert [r.arrival_slot for r in a] == [k // 2 for k in range(10)]
+    assert {r.gateway for r in a} <= {6, 7}
+    with pytest.raises(ValueError, match="gateway"):
+        synthesize_workload(4, [])
+
+
+# ------------------------------------------------------------------ decoders
+def test_null_decoder_deterministic_and_lane_isolated():
+    d1, d2 = NullDecoder(2, 2), NullDecoder(2, 2)
+    prompts = {0: [np.array([1, 2, 3]), np.array([4, 5])]}
+    assert d1.prefill_waves(prompts) == d2.prefill_waves(prompts)
+    active = np.array([True, False])
+    t1, t2 = d1.step(active), d2.step(active)
+    np.testing.assert_array_equal(t1, t2)
+    # the inactive replica's lanes did not advance
+    np.testing.assert_array_equal(t1[1], (d1._state[1] % d1.vocab))
+    assert (d1._state[1] == 0).all()
+
+
+# --------------------------------------------------------------------- fleet
+def _req(rid, max_new=3, gateway=6):
+    return InferenceRequest(
+        rid=rid, gateway=gateway, prompt=np.array([rid + 1, 2]), max_new=max_new
+    )
+
+
+def test_fleet_wave_admission_and_ticks():
+    fleet = ReplicaFleet([0], batch=2, decoder=NullDecoder(1, 2))
+    for i in range(3):
+        fleet.enqueue(0, _req(i))
+    waves = fleet.admit({0})
+    assert [r.rid for r in waves[0]] == [0, 1]    # batch-bounded wave
+    assert fleet.busy(0) and fleet.queued(0) == 1
+    assert all(len(r.out) == 1 for r in waves[0])  # prefill emits token 0
+    # a busy replica admits nothing more (wave discipline)
+    assert fleet.admit({0}) == {}
+    done = []
+    for _ in range(5):
+        for _, reqs in fleet.tick().items():
+            done.extend(reqs)
+        if done:
+            break
+    assert sorted(r.rid for r in done) == [0, 1]
+    assert all(len(r.out) == 3 for r in done)
+    assert not fleet.busy(0)
+    # lanes freed: the queued request admits next
+    assert [r.rid for r in fleet.admit({0})[0]] == [2]
+
+
+def test_fleet_max_new_1_frees_lanes_at_prefill():
+    fleet = ReplicaFleet([0], batch=2, decoder=NullDecoder(1, 2))
+    fleet.enqueue(0, _req(0, max_new=1))
+    wave = fleet.admit({0})[0]
+    assert wave[0].done
+    assert not fleet.busy(0)          # regression guard: lanes released
+
+
+def test_fleet_drain_returns_everything():
+    fleet = ReplicaFleet([0], batch=2, decoder=NullDecoder(1, 2))
+    for i in range(3):
+        fleet.enqueue(0, _req(i))
+    fleet.admit({0})
+    drained = fleet.drain(0)
+    assert sorted(r.rid for r in drained) == [0, 1, 2]
+    assert not fleet.busy(0) and fleet.queued(0) == 0
+
+
+# -------------------------------------------------------------------- engine
+def test_engine_validates_roles():
+    scn = _smoke()
+    with pytest.raises(ValueError, match="gateway and replica"):
+        fleet = ReplicaFleet([6], 2, NullDecoder(1, 2))
+        ServingEngine.from_scenario(scn, fleet)
+    eng, _ = _engine()
+    with pytest.raises(ValueError, match="ground stations"):
+        eng.fail(6)
+
+
+def test_engine_end_to_end_all_delivered():
+    eng, scn = _engine()
+    workload = synthesize_workload(
+        8, scn.ground_ids, rate_per_slot=2.0, max_new=4
+    )
+    report = eng.run(workload)
+    summ = report.summary()
+    assert summ["delivered"] == 8 and summ["undelivered"] == 0
+    assert summ["tokens"] == 8 * 4
+    assert summ["latency_p50_slots"] > 0
+    assert summ["wall_s"] > 0
+    for r in report.delivered:
+        assert r.status == rq.DELIVERED
+        assert r.hops_up >= 1 and r.hops_down >= 1
+        assert r.replica in (0, 3)
+        assert len(r.out) == 4
+    verdict = audit_serving_run(
+        report.records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=[0, 3],
+    )
+    assert verdict.ok, verdict.summary()
+    assert verdict.n_hops > 0
+
+
+def test_engine_table_cache_lru():
+    eng, _ = _engine()
+    sinks = frozenset([0, 3])
+    assert eng._table(sinks) is eng._table(sinks)      # hit path
+    assert eng._table(frozenset()) is None
+
+
+def test_engine_churn_reroutes_without_loss():
+    eng, scn = _engine()
+    workload = synthesize_workload(
+        10, scn.ground_ids, rate_per_slot=2.0, max_new=4
+    )
+    epoch = eng.epoch
+
+    def on_slot(engine, slot):
+        if slot == epoch // 3:
+            engine.fail(0)
+        elif slot == epoch // 3 + max(2, epoch // 4):
+            engine.restore(0)
+
+    report = eng.run(workload, on_slot=on_slot)
+    summ = report.summary()
+    assert summ["undelivered"] == 0, [r.status for r in report.undelivered]
+    # the drained wave re-routed: retries happened, nothing was lost
+    assert summ["retries"] >= 1
+    verdict = audit_serving_run(
+        report.records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=[0, 3],
+    )
+    assert verdict.ok, verdict.summary()
+    # provenance recorded the drain
+    assert any(r.requeued for r in report.records)
+
+
+def test_engine_dead_replica_batch_drains():
+    """Requests decoding on a failed replica restart from their gateway."""
+    eng, scn = _engine(replicas=(0,))    # single replica: all waves land on 0
+    workload = synthesize_workload(
+        4, scn.ground_ids, rate_per_slot=4.0, max_new=16
+    )
+    seen_decoding = {}
+
+    def on_slot(engine, slot):
+        for req in engine.pending.values():
+            if req.status == rq.DECODING and req.rid not in seen_decoding:
+                seen_decoding[req.rid] = slot
+        if len(seen_decoding) >= 2 and not engine_failed[0]:
+            engine.fail(0)
+            engine_failed[0] = True
+        elif engine_failed[0] and 0 not in engine.alive:
+            engine.restore(0)
+
+    engine_failed = [False]
+    report = eng.run(workload, on_slot=on_slot)
+    assert engine_failed[0]
+    summ = report.summary()
+    assert summ["undelivered"] == 0
+    assert summ["retries"] >= 1
+    # tokens decoded before the failure were discarded, not delivered twice
+    assert all(len(r.out) == 16 for r in report.delivered)
+
+
+# --------------------------------------------------------------------- audit
+def _clean_run():
+    eng, scn = _engine()
+    workload = synthesize_workload(
+        6, scn.ground_ids, rate_per_slot=2.0, max_new=3
+    )
+    report = eng.run(workload)
+    return eng, report
+
+
+def test_audit_flags_phantom_and_illegal_sends():
+    eng, report = _clean_run()
+    records = list(report.records)
+    # a hop for a request id the engine never saw
+    records[0] = dataclasses.replace(
+        records[0],
+        sends=records[0].sends + (Send(records[0].slot, 0, 1, "req", 999),),
+    )
+    verdict = audit_serving_run(
+        records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=[0, 3],
+    )
+    assert not verdict.ok
+    assert any("999" in str(v) for v in verdict.violations)
+
+
+def test_audit_flags_link_not_in_slot():
+    eng, report = _clean_run()
+    rid = report.requests[0].rid
+    records = list(report.records)
+    # teleport: a hop on a pair the slot relation does not contain
+    bad = Send(records[2].slot, 0, 5, "req", rid)
+    records[2] = dataclasses.replace(
+        records[2], sends=records[2].sends + (bad,)
+    )
+    verdict = audit_serving_run(
+        records, report.requests, eng.base_rels,
+        gateways=eng.gateways, replicas=[0, 3],
+    )
+    assert not verdict.ok
+
+
+def test_audit_flags_lost_request():
+    eng, report = _clean_run()
+    # claim a request existed that never delivered and never moved
+    ghost = InferenceRequest(
+        rid=777, gateway=eng.gateways[0], prompt=np.array([1]), max_new=2
+    )
+    verdict = audit_serving_run(
+        report.records, list(report.requests) + [ghost], eng.base_rels,
+        gateways=eng.gateways, replicas=[0, 3],
+    )
+    assert any(v.kind == "lost-request" for v in verdict.violations)
+
+
+# ------------------------------------------------------- multi-device (slow)
+@pytest.mark.slow
+def test_serving_model_decoder_suite():
+    """End-to-end serving with the real stacked-shard_map decoder on 8
+    forced host devices, including a mid-run satellite failure."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        f"{ROOT / 'src'}:{ROOT / 'tests'}:" + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "_serving_worker.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=1200,
+    )
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    assert proc.returncode == 0, "worker failed"
+    assert "ALL-OK" in proc.stdout

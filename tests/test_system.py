@@ -18,6 +18,10 @@ PUBLIC_MODULES = [
     "repro.core.gossip",
     "repro.core.fl",
     "repro.core.compress",
+    "repro.constellation.scenario",
+    "repro.serving",
+    "repro.serving.engine",
+    "repro.serving.audit",
 ]
 
 
